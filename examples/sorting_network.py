@@ -1,0 +1,47 @@
+"""Paper §7: merge sort with a balanced periodic merger, written with parm.
+
+The declarative network compiles to [fused BMMC permute | compare-exchange]
+stages; BMMC fusion collapses ~15x of the permutation stages, and each
+remaining BMMC runs as <=2 fully-coalesced tiled kernel passes.
+
+Run: PYTHONPATH=src python examples/sorting_network.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sort import (compile_sort, fuse, num_perm_stages,
+                             run_stages, sort_rec)
+from repro.kernels.ops import bmmc_permute
+
+
+def main():
+    n = 10
+    xs = np.random.default_rng(0).integers(0, 10**6, size=1 << n).astype(np.int32)
+
+    # reference recursion (paper pseudocode, numpy)
+    ref = sort_rec(n, xs.copy())
+    assert np.array_equal(ref, np.sort(xs))
+
+    # compiled network
+    raw = compile_sort(n)
+    prog = fuse(raw)
+    print(f"2^{n} elements: {num_perm_stages(raw)} raw perm stages "
+          f"-> {num_perm_stages(prog)} fused BMMC stages "
+          f"({len(prog) - num_perm_stages(prog)} compare-exchange sweeps)")
+
+    # run with the pure-jnp engine and with the tiled Pallas engine
+    got_ref = np.asarray(run_stages(prog, jnp.asarray(xs)))
+    engine = lambda x, b: bmmc_permute(x, b, t=3)
+    t0 = time.perf_counter()
+    got_pallas = np.asarray(run_stages(prog, jnp.asarray(xs), engine=engine))
+    dt = time.perf_counter() - t0
+    assert np.array_equal(got_ref, np.sort(xs))
+    assert np.array_equal(got_pallas, np.sort(xs))
+    print(f"sorted correctly via tiled Pallas kernels "
+          f"(interpret mode, {dt:.2f}s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

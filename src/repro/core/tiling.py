@@ -1,0 +1,292 @@
+"""Tile-bit partitioning and offline table generation (paper §4.1-4.3, §5.1).
+
+For a *tiled* BMMC ``(A, c)`` on ``n``-bit indices and tile parameter ``t``
+(= ``n_tile``; one "row" = 2^t consecutive elements), input index bits are
+partitioned into:
+
+* tile column bits  — the low ``t`` bits (set L),
+* tile row bits     — the witness columns ``i_1..i_t`` (set R; for a BPC these
+  are exactly ``{j : p(j) < t}``),
+* overlap bits      — R ∩ L (``n_over`` of them),
+* thread-block bits — the rest (``n_TB = n - 2t + n_over``), all >= t.
+
+One tile = all index combinations of (L ∪ R) bits with the block bits fixed:
+``2^(t - n_over)`` full input rows, mapping onto ``2^(t - n_over)`` full
+output rows. This module precomputes, per permutation (offline, matching the
+paper's codegen setting):
+
+* ``in_rows[g, r]``   — input row id read by tile ``g`` (row view: (2^(n-t), 2^t)),
+* ``out_rows[g, r']`` — output row id written by tile ``g``,
+* ``xor_low[g]``      — per-tile XOR on the intra-tile lane gather (the
+  block-bit contribution to the low output bits; 0 for every BPC),
+* ``src0``            — flat intra-tile gather table for tile 0:
+  ``out_tile.flat[j] = in_tile.flat[src0[j ^ xor_low[g]]]``.
+
+The per-tile XOR trick is the TPU replacement for re-deriving indices per
+thread: tables are computed once; the kernel's scalar core only reads them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .bmmc import Bmmc
+from . import f2
+
+
+def _scatter_bits(value: int, positions: list) -> int:
+    """Place bit k of ``value`` at ``positions[k]``."""
+    out = 0
+    for k, pos in enumerate(positions):
+        if (value >> k) & 1:
+            out |= 1 << pos
+    return out
+
+
+def _gather_bits(value: int, positions: list) -> int:
+    """Collect bits of ``value`` at ``positions`` into a compact int."""
+    out = 0
+    for k, pos in enumerate(positions):
+        if (value >> pos) & 1:
+            out |= 1 << k
+    return out
+
+
+def _run_length(rows: np.ndarray) -> int:
+    """Largest power-of-two run of consecutive row ids shared by all tiles.
+
+    This is the DMA-merge factor: ``run`` consecutive rows can be copied by a
+    single descriptor (the TPU analogue of the paper's §4.3 amortization).
+    """
+    n_tiles, rpt = rows.shape
+    run = 1
+    while run * 2 <= rpt:
+        nxt = run * 2
+        blocks = rows.reshape(n_tiles, rpt // nxt, nxt)
+        diff = blocks - blocks[..., :1]
+        if np.array_equal(diff, np.broadcast_to(np.arange(nxt), diff.shape)):
+            run = nxt
+        else:
+            break
+    return run
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Offline execution plan for one tiled-BMMC pass."""
+
+    bmmc: Bmmc
+    t: int                      # n_tile: log2 elements per row
+    row_cols: tuple             # R, sorted
+    n_over: int
+    tb_positions: tuple         # thread-block bit positions, sorted (all >= t)
+    in_rows: np.ndarray         # (n_tiles, rows_per_tile) int32
+    out_rows: np.ndarray        # (n_tiles, rows_per_tile) int32
+    xor_low: np.ndarray         # (n_tiles,) int32
+    src0: np.ndarray            # (rows_per_tile, 2^t) int32 flat gather table
+    in_run: int                 # input DMA merge run (rows)
+    out_run: int                # output DMA merge run (rows)
+
+    @property
+    def n(self) -> int:
+        return self.bmmc.n
+
+    @property
+    def n_tiles(self) -> int:
+        return self.in_rows.shape[0]
+
+    @property
+    def rows_per_tile(self) -> int:
+        return self.in_rows.shape[1]
+
+    @property
+    def row_len(self) -> int:
+        return 1 << self.t
+
+    # -- modeled memory transactions (the quantity behind the paper's
+    # -- bandwidth results; used by the benchmark harness) -------------------
+    def dma_descriptors(self) -> int:
+        """Total HBM DMA descriptors issued (reads + writes)."""
+        per_tile = self.rows_per_tile // self.in_run + self.rows_per_tile // self.out_run
+        return self.n_tiles * per_tile
+
+    def bytes_per_descriptor(self, itemsize: int) -> tuple:
+        return (self.in_run * self.row_len * itemsize,
+                self.out_run * self.row_len * itemsize)
+
+
+def plan_tiled(bmmc: Bmmc, t: int) -> Optional[TilePlan]:
+    """Build a TilePlan, or None if ``bmmc`` is not tiled for this ``t``."""
+    n = bmmc.n
+    if 2 * t > n + t:  # t > n: nonsensical
+        return None
+    cols = bmmc.tiled_columns(t)
+    if cols is None:
+        return None
+    low = set(range(t))
+    r_set = set(cols)
+    n_over = len(r_set & low)
+    if n - 2 * t + n_over < 0:
+        return None  # tile would exceed the array; caller falls back
+    r_not_l = sorted(r_set - low)           # t - n_over positions, all >= t
+    l_not_r = sorted(low - r_set)           # t - n_over positions, all < t
+    tb = sorted(set(range(n)) - low - r_set)
+    n_tb = len(tb)
+    assert n_tb == n - 2 * t + n_over
+
+    rpt = 1 << (t - n_over)                  # rows per tile
+    n_tiles = 1 << n_tb
+    row_len = 1 << t
+    low_mask = row_len - 1
+
+    ainv = bmmc.inverse()
+
+    in_rows = np.empty((n_tiles, rpt), dtype=np.int32)
+    out_rows = np.empty((n_tiles, rpt), dtype=np.int32)
+    xor_low = np.empty((n_tiles,), dtype=np.int32)
+
+    # Row tables. y_high = A[t:, :] x ^ c_high depends only on non-R bits of x
+    # (the zero block kills R), i.e. on (L\R, TB): enumerate r' over L\R.
+    for g in range(n_tiles):
+        base = _scatter_bits(g, tb)
+        delta = f2.matvec(bmmc.rows, base)
+        xor_low[g] = delta & low_mask
+        for r in range(rpt):
+            in_rows[g, r] = (base | _scatter_bits(r, r_not_l)) >> t
+        for rp in range(rpt):
+            y = bmmc.apply(base | _scatter_bits(rp, l_not_r))
+            out_rows[g, rp] = y >> t
+
+    # Intra-tile gather table for tile 0 (other tiles differ by xor_low only).
+    src0 = np.empty((rpt, row_len), dtype=np.int32)
+    for rp in range(rpt):
+        y_hi = int(out_rows[0, rp]) << t
+        for cp in range(row_len):
+            x = ainv.apply(y_hi | cp)
+            assert _gather_bits(x, tb) == 0, "tile-0 source must be in tile 0"
+            r = _gather_bits(x, r_not_l)
+            src0[rp, cp] = r * row_len + (x & low_mask)
+    return TilePlan(
+        bmmc=bmmc, t=t, row_cols=tuple(sorted(cols)), n_over=n_over,
+        tb_positions=tuple(tb), in_rows=in_rows, out_rows=out_rows,
+        xor_low=xor_low, src0=src0,
+        in_run=_run_length(in_rows), out_run=_run_length(out_rows),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStats:
+    """Analytic plan statistics — O(n^2) bit math, no table enumeration.
+
+    Matches TilePlan's n_over / rows_per_tile / n_tiles / in_run / out_run
+    (property-tested against the enumerated tables), usable at paper scale
+    (n = 30 => 2^20 tiles) where building per-tile tables is infeasible.
+    """
+    n: int
+    t: int
+    n_over: int
+    n_tiles: int
+    rows_per_tile: int
+    row_len: int
+    in_run: int
+    out_run: int
+
+    def dma_descriptors(self) -> int:
+        per_tile = (self.rows_per_tile // self.in_run
+                    + self.rows_per_tile // self.out_run)
+        return self.n_tiles * per_tile
+
+    def bytes_per_descriptor(self, itemsize: int) -> tuple:
+        return (self.in_run * self.row_len * itemsize,
+                self.out_run * self.row_len * itemsize)
+
+
+def plan_stats(bmmc: Bmmc, t: int) -> Optional[PlanStats]:
+    """Analytic counterpart of ``plan_tiled`` (no per-tile enumeration)."""
+    n = bmmc.n
+    cols = bmmc.tiled_columns(t)
+    if cols is None:
+        return None
+    low = set(range(t))
+    r_set = set(cols)
+    n_over = len(r_set & low)
+    if n - 2 * t + n_over < 0:
+        return None
+    r_not_l = sorted(r_set - low)
+    l_not_r = sorted(low - r_set)
+    tb = sorted(set(range(n)) - low - r_set)
+    rpt = 1 << (t - n_over)
+
+    # input-run: rows consecutive iff the low R\L positions are t, t+1, ...
+    k_in = 0
+    while k_in < len(r_not_l) and r_not_l[k_in] == t + k_in:
+        k_in += 1
+
+    # output-run: out_rows[g, r'] = (A (base|scatter(r')) ^ c) >> t, affine in
+    # the r' bits. Runs of 2^k are consecutive iff bit i of r' moves y_high
+    # by exactly 2^i for i < k and no other contribution (base bits, c)
+    # touches the low k bits of y_high.
+    deltas = [f2.matvec(bmmc.rows, 1 << pos) >> t for pos in l_not_r]
+    others = [f2.matvec(bmmc.rows, 1 << pos) >> t for pos in tb]
+    others.append(bmmc.c >> t)
+    k_out = 0
+    while k_out < len(deltas):
+        k = k_out + 1
+        mask = (1 << k) - 1
+        ok = all(deltas[i] == (1 << i) for i in range(k))
+        ok = ok and all((d & mask) == 0 for d in deltas[k:])
+        ok = ok and all((o & mask) == 0 for o in others)
+        if not ok:
+            break
+        k_out = k
+    return PlanStats(n=n, t=t, n_over=n_over, n_tiles=1 << len(tb),
+                     rows_per_tile=rpt, row_len=1 << t,
+                     in_run=1 << k_in, out_run=1 << k_out)
+
+
+def stats_bmmc(bmmc: Bmmc, t: int) -> list:
+    """Analytic stats for the 1-2 tiled passes of an arbitrary BMMC."""
+    out = []
+    for factor in bmmc.factor_tiled(t):
+        s = plan_stats(factor, t)
+        if s is None:
+            raise ValueError(f"factor expected tiled for t={t}")
+        out.append(s)
+    return out
+
+
+def plan_bmmc(bmmc: Bmmc, t: int) -> list:
+    """Plan an arbitrary BMMC as 1-2 tiled passes (paper §5.2)."""
+    plans = []
+    for factor in bmmc.factor_tiled(t):
+        p = plan_tiled(factor, t)
+        if p is None:
+            raise ValueError(f"factor expected to be tiled for t={t}: {factor}")
+        plans.append(p)
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Naive-kernel transaction model (paper §6 "naive" column): each warp/DMA
+# touches whatever segments its element mapping hits. On TPU a naive gather
+# issues one descriptor per non-contiguous run; we count exact runs.
+# ---------------------------------------------------------------------------
+
+def naive_write_runs(bmmc: Bmmc, seg_elems: int, sample_tiles: int = 64) -> float:
+    """Average # of distinct segments written per contiguous input segment.
+
+    ``seg_elems`` plays the role of warp-width/segment (32 for the paper's
+    GPU model; a lane-row for TPU). 1.0 == fully coalesced.
+    """
+    n = bmmc.n
+    size = 1 << n
+    segs = min(sample_tiles, size // seg_elems)
+    total = 0
+    rng = np.random.default_rng(0)
+    starts = rng.choice(size // seg_elems, size=segs, replace=False)
+    for s in starts:
+        ys = {bmmc.apply(int(s) * seg_elems + i) // seg_elems for i in range(seg_elems)}
+        total += len(ys)
+    return total / segs

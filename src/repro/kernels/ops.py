@@ -1,0 +1,122 @@
+"""Public BMMC permutation ops: planning, dispatch, jit-friendly wrappers.
+
+``bmmc_permute`` is the user-facing entry point. Dispatch:
+
+* degenerate / tiny arrays                -> pure-jnp gather (ref oracle);
+* tiled BMMC (incl. every BPC)            -> one tiled Pallas pass;
+* general BMMC                            -> two tiled passes, A = (UR)(RLP)
+                                             (paper §5.2).
+
+The BMMC is a *trace-time constant* (offline setting, paper §3/§6): plans
+and tables are built once per (matrix, shape) and cached.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bmmc import Bmmc
+from ..core.tiling import TilePlan, plan_bmmc, plan_tiled
+from . import ref as _ref
+from .bmmc_permute import tiled_permute
+
+# VMEM working-set budget for one tile buffer (two buffers are held; v5e has
+# 16 MiB VMEM, leave headroom for the gather table + pipeline).
+_VMEM_TILE_BYTES = 4 * 1024 * 1024
+_MAX_T = 12
+
+
+def choose_tile(n: int, itemsize: int, d: int = 1, t: Optional[int] = None) -> Optional[int]:
+    """Pick n_tile: the LARGEST t whose worst-case (2^t x 2^t) tile fits the
+    VMEM budget (perf iteration: kernel-hillclimb #1 — descriptor-issue, not
+    bandwidth, bounds scattered-bit permutations, and descriptors fall 4x
+    per +1 of t; the paper's warp-sized t=5 is far off the TPU optimum).
+
+    Returns None if the array is too small to be worth tiling (fallback to
+    the reference gather — the whole array fits in VMEM anyway).
+    """
+    if t is not None:
+        return t if 2 * t <= n else None
+    t = _MAX_T
+    # fit (2^t x 2^t) worst-case tile (n_over = 0) in the VMEM budget
+    while t > 1 and (1 << (2 * t)) * itemsize * d > _VMEM_TILE_BYTES:
+        t -= 1
+    t = min(t, n // 2)
+    if t < 1:
+        return None
+    return t
+
+
+@functools.lru_cache(maxsize=512)
+def _plans_cached(rows: tuple, c: int, t: int) -> tuple:
+    return tuple(plan_bmmc(Bmmc(rows, c), t))
+
+
+def bmmc_plans(bmmc: Bmmc, t: int):
+    return _plans_cached(bmmc.rows, bmmc.c, t)
+
+
+def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
+                 engine: str = "pallas", interpret: bool = True) -> jax.Array:
+    """Permute ``x`` (shape (2^n,) or (2^n, d)) by ``out[A i ^ c] = x[i]``.
+
+    ``engine``: "pallas" (tiled kernels) or "ref" (pure-jnp oracle).
+    """
+    assert x.shape[0] == bmmc.size, (x.shape, bmmc.n)
+    if engine == "ref":
+        return _ref.bmmc_ref(x, bmmc)
+    if bmmc.is_identity_perm():
+        return x
+    d = x.shape[1] if x.ndim == 2 else 1
+    teff = choose_tile(bmmc.n, x.dtype.itemsize, d, t)
+    if teff is None:
+        return _ref.bmmc_ref(x, bmmc)
+    for plan in bmmc_plans(bmmc, teff):
+        x = tiled_permute(x, plan, interpret=interpret)
+    return x
+
+
+def num_passes(bmmc: Bmmc, t: int) -> int:
+    """1 for tiled BMMCs (incl. all BPCs), 2 for general BMMCs (§5.2)."""
+    return len(bmmc_plans(bmmc, t))
+
+
+def make_bmmc_permute(bmmc: Bmmc, *, t: Optional[int] = None,
+                      engine: str = "pallas", interpret: bool = True):
+    """Returns a jit-compiled unary function specialized to ``bmmc``."""
+    @jax.jit
+    def fn(x):
+        return bmmc_permute(x, bmmc, t=t, engine=engine, interpret=interpret)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Transaction model — the offline counterpart of the paper's effective-
+# bandwidth measurements (used by the benchmark harness; no GPU/TPU clock
+# exists in this container, see DESIGN.md §7.4).
+# ---------------------------------------------------------------------------
+
+def modeled_transactions(bmmc: Bmmc, t: int, itemsize: int = 4) -> dict:
+    """DMA descriptor counts + bytes for the tiled pipeline vs a copy."""
+    plans = bmmc_plans(bmmc, t)
+    total_desc = sum(p.dma_descriptors() for p in plans)
+    n = bmmc.n
+    nbytes = (1 << n) * itemsize
+    # copy baseline: same row view, one descriptor per in_run-sized run both ways
+    copy_desc = 2 * (1 << (n - t))
+    min_run = min(min(p.in_run, p.out_run) for p in plans)
+    return {
+        "passes": len(plans),
+        "descriptors": total_desc,
+        "copy_descriptors": copy_desc,
+        "bytes_moved": nbytes * 2 * len(plans),
+        "copy_bytes": nbytes * 2,
+        "min_run_bytes": min_run * (1 << t) * itemsize,
+        # modeled fraction of copy throughput, assuming descriptor-issue
+        # bound when runs are short and bandwidth bound otherwise:
+        "bandwidth_fraction": (nbytes * 2) / (nbytes * 2 * len(plans)),
+    }

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import model as M
+from ..models.layers import shape_tree, axes_tree
+from ..models.transformer import stack_cache_defs
+from ..optim.adamw import AdamWConfig
+from ..parallel.sharding import (batch_spec, param_shardings, spec_for)
+from ..train.step import make_train_step, opt_state_shapes
+from ..train.serve import make_decode_step, make_prefill_step
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from . import hw
+
+OUTDIR_DEFAULT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                              "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """Batch inputs for one step of the given kind."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        s = shape.seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token against a cache of seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if (cfg.is_encdec or cfg.family == "vlm") and shape.kind != "decode":
+        batch["src"] = jax.ShapeDtypeStruct((b, cfg.src_len, cfg.d_model),
+                                            cfg.dtype)
+    return batch
+
+
+def batch_shardings(mesh: Mesh, batch: Dict):
+    return {k: NamedSharding(mesh, batch_spec(mesh, v.shape[0], len(v.shape)))
+            for k, v in batch.items()}
+
+
+def _opt_shardings(mesh: Mesh, pshapes, paxes, opt_cfg: AdamWConfig):
+    from ..optim.adamw import state_shapes
+    osh = state_shapes(pshapes, opt_cfg)
+    if opt_cfg.state_bits == 8:
+        # Quantized moments keep the parameter's leading dims (blocks run
+        # along the last axis), so they inherit the parameter's sharding
+        # with the trailing (blocks, block)/(blocks, 1) dims replicated.
+        def rec(sh, ax):
+            if isinstance(sh, dict) and set(sh) == {"q", "s"}:
+                lead = tuple(ax[:-1]) if ax else ()
+                return {"q": NamedSharding(mesh, spec_for(
+                            mesh, lead + (None, None), sh["q"].shape)),
+                        "s": NamedSharding(mesh, spec_for(
+                            mesh, lead + (None, None), sh["s"].shape))}
+            return {k: rec(sh[k], ax[k]) for k in sh}
+        return type(osh)(step=NamedSharding(mesh, P()),
+                         m=rec(osh.m, paxes), v=rec(osh.v, paxes))
+    pshard = param_shardings(mesh, pshapes, paxes)
+    return type(osh)(step=NamedSharding(mesh, P()), m=pshard, v=pshard)
+
+
+def _sharded_bytes(sds, sharding, mesh: Mesh) -> float:
+    """Per-device bytes of one array under its sharding."""
+    spec = sharding.spec
+    shards = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        for n in names:
+            shards *= mesh.shape[n]
+    return sds.dtype.itemsize * float(np.prod(sds.shape, dtype=np.float64)) / shards
+
+
+def _tree_bytes(shapes, shardings, mesh) -> float:
+    total = 0.0
+    flat_s = jax.tree.leaves(shapes)
+    flat_h = jax.tree.leaves(shardings,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    for s, h in zip(flat_s, flat_h):
+        total += _sharded_bytes(s, h, mesh)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               grad_accum: int = 1):
+    """Returns (fn, args, in_shardings, out_shardings, donate, analytic)."""
+    pshapes = M.param_shapes(cfg)
+    paxes = M.param_axes(cfg)
+    pshard = param_shardings(mesh, pshapes, paxes)
+    batch = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, batch)
+    analytic = {"param_bytes_per_device": _tree_bytes(pshapes, pshard, mesh)}
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(state_bits=cfg.opt_bits)
+        oshapes = opt_state_shapes(cfg, pshapes, opt_cfg)
+        oshard = _opt_shardings(mesh, pshapes, paxes, opt_cfg)
+        analytic["opt_bytes_per_device"] = _tree_bytes(oshapes, oshard, mesh)
+        step_fn, _ = make_train_step(cfg, mesh, opt_cfg, grad_accum=grad_accum)
+        args = (pshapes, oshapes, batch)
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        donate = (0, 1)
+        return step_fn, args, in_sh, out_sh, donate, analytic
+
+    if shape.kind == "prefill":
+        cdefs = stack_cache_defs(cfg, shape.global_batch, shape.seq_len)
+        cshapes, cax = shape_tree(cdefs), axes_tree(cdefs)
+        cshard = param_shardings(mesh, cshapes, cax)
+        analytic["cache_bytes_per_device"] = _tree_bytes(cshapes, cshard, mesh)
+        fn = make_prefill_step(cfg, mesh)
+        args = (pshapes, batch)
+        in_sh = (pshard, bshard)
+        out_sh = (None, cshard)
+        return fn, args, in_sh, out_sh, (), analytic
+
+    # decode
+    cdefs = stack_cache_defs(cfg, shape.global_batch, shape.seq_len)
+    cshapes, cax = shape_tree(cdefs), axes_tree(cdefs)
+    cshard = param_shardings(mesh, cshapes, cax)
+    analytic["cache_bytes_per_device"] = _tree_bytes(cshapes, cshard, mesh)
+    fn = make_decode_step(cfg, mesh)
+    tokens = batch["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (pshapes, cshapes, tokens, pos)
+    in_sh = (pshard, cshard, bshard["tokens"], NamedSharding(mesh, P()))
+    out_sh = (None, cshard)
+    return fn, args, in_sh, out_sh, (1,), analytic
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D (train) / 2*N*D (inference); N = active params for MoE."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skipped (full attention): 500k-token decode requires "
+                "sub-quadratic attention; this arch is full-attention "
+                "(see DESIGN.md §4)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             resume: bool = True, mesh_shape=None, grad_accum: int = 1) -> Dict:
+    import dataclasses
+    cfg = get_config(arch)
+    remat = os.environ.get("DRYRUN_REMAT")
+    if remat:
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    sp_env = os.environ.get("DRYRUN_SP")
+    if sp_env is not None:
+        cfg = dataclasses.replace(cfg, seq_parallel=sp_env not in ("0", "off"))
+    moe_impl = os.environ.get("DRYRUN_MOE")
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    shape = SHAPES[shape_name]
+    if mesh_shape is None:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    else:
+        base = "x".join(str(d) for d in mesh_shape)
+        mesh_name = f"pod2x{base}" if multi_pod else f"pod{base}"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    if grad_accum > 1:
+        cell_id += f"__ga{grad_accum}"
+    if remat:
+        cell_id += f"__remat-{remat}"
+    if sp_env is not None:
+        cell_id += "__sp" if cfg.seq_parallel else "__nosp"
+    if moe_impl:
+        cell_id += f"__moe-{moe_impl}"
+    path = os.path.join(outdir, cell_id + ".json")
+    if resume and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if "error" not in rec:
+            print(f"[skip: done] {cell_id}")
+            return rec
+
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "n_devices": 512 if multi_pod else 256,
+                 "kind": shape.kind,
+                 "model_flops": model_flops(cfg, shape),
+                 "n_params": cfg.n_params(),
+                 "n_active_params": cfg.n_active_params()}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["skipped"] = reason
+        _save(path, rec)
+        print(f"[skip: design] {cell_id}: {reason}")
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+        t0 = time.time()
+        fn, args, in_sh, out_sh, donate, analytic = build_cell(
+            cfg, shape, mesh, grad_accum=grad_accum)
+        rec.update(analytic)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "optimal_seconds", "utilization")}
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes") if hasattr(ma, k)}
+        t2 = time.time()
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        rec["hlo_analysis"] = analyze_hlo(hlo)
+        rec["analyze_s"] = time.time() - t2
+        print(f"[ok] {cell_id}: compile {rec['compile_s']:.1f}s  "
+              f"dot_flops/dev {rec['hlo_analysis'].get('dot_flops', 0):.3e}  "
+              f"coll/dev {rec['hlo_analysis'].get('collective_total', 0):.3e}B")
+    except Exception as e:  # record the failure; a failing cell is a bug
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {cell_id}: {rec['error']}")
+    _save(path, rec)
+    return rec
+
+
+def _save(path: str, rec: Dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default=os.environ.get("DRYRUN_OUT",
+                                                       "experiments/dryrun"))
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override per-pod (data,model), e.g. 32x8")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default=None, choices=[None, "nothing", "dots"])
+    args = ap.parse_args()
+    if args.remat:
+        os.environ["DRYRUN_REMAT"] = args.remat
+    mesh_shape = (tuple(int(d) for d in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_cell(arch, shape, mp, args.outdir,
+                         resume=not args.no_resume, mesh_shape=mesh_shape,
+                         grad_accum=args.grad_accum)
+
+
+if __name__ == "__main__":
+    main()

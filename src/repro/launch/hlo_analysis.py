@@ -1,0 +1,236 @@
+"""Post-partitioning HLO analysis: collective bytes + trip-weighted FLOPs.
+
+``compiled.cost_analysis()`` on XLA counts a ``while`` body **once** and has
+no per-collective breakdown, so we parse the partitioned HLO text
+(``compiled.as_text()``):
+
+* every ``all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute`` contributes its operand bytes (resolved through a
+  per-computation symbol table, since operands are name references);
+* every ``dot`` contributes ``2 * prod(out_dims) * prod(contracted_dims)``
+  FLOPs;
+* ops inside ``while`` bodies are multiplied by the loop trip count taken
+  from ``backend_config={"known_trip_count":{"n":...}}`` (fallback: largest
+  constant in the loop condition), so ``lax.scan`` over layers / KV blocks
+  is accounted exactly;
+* ``fusion`` (calls=), ``call``/``custom-call`` (to_apply=) and conditional
+  branches are walked bottom-up.
+
+All quantities are **per-device** (the HLO is the per-device SPMD program).
+Validated against hand-counted programs in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_TOK.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes_list(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_shapes(rhs: str):
+    """Shapes of an op's result: everything before the opcode's '('."""
+    i = rhs.find("(")
+    head = rhs if i < 0 else rhs[:i]
+    return _parse_shapes(head)
+
+
+def _operand_names(rhs: str, opcode: str = None) -> List[str]:
+    """Names inside the op's argument parens.
+
+    With tuple-typed results (e.g. ``(s32[..], ..) all-to-all(%a, %b)``)
+    the first ``(`` belongs to the result *type*; anchor on the opcode
+    token when given.
+    """
+    i = -1
+    if opcode:
+        m = re.search(re.escape(opcode) + r"\(", rhs)
+        if m:
+            i = m.end() - 1
+    if i < 0:
+        i = rhs.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return re.findall(r"%([\w\.\-]+)", rhs[i:j + 1])
+    return re.findall(r"%([\w\.\-]+)", rhs[i:])
+
+
+class _Comp:
+    def __init__(self):
+        self.lines: List[str] = []
+        self.shapes: Dict[str, List] = {}   # symbol -> result shapes
+        self.params: Dict[str, List] = {}
+
+
+def _split_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            if line.endswith("{"):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = _Comp()
+                    # parameters declared in the header: %name: shape
+                    for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))",
+                                          line):
+                        comps[cur].params[pm.group(1)] = _parse_shapes(pm.group(2))
+        else:
+            if line.startswith("}"):
+                cur = None
+                continue
+            comps[cur].lines.append(line)
+            dm = _DEF_RE.match(line)
+            if dm:
+                comps[cur].shapes[dm.group(1)] = _result_shapes(dm.group(2))
+    return comps
+
+
+def _called(line: str) -> List[Tuple[str, str]]:
+    names = []
+    for attr in ("to_apply=", "body=", "condition=", "true_computation=",
+                 "false_computation=", "calls="):
+        for m in re.finditer(re.escape(attr) + r"%?([\w\.\-]+)", line):
+            names.append((attr[:-1], m.group(1)))
+    i = line.find("branch_computations={")
+    if i >= 0:
+        inner = line[i + len("branch_computations={"):line.find("}", i)]
+        for nm in inner.split(","):
+            names.append(("branch", nm.strip().lstrip("%")))
+    return names
+
+
+def _dot_flops(comp: _Comp, rhs: str) -> float:
+    out_shapes = _result_shapes(rhs)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    ops = _operand_names(rhs)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    if m and ops:
+        lhs = comp.shapes.get(ops[0]) or comp.params.get(ops[0])
+        if lhs:
+            dims = lhs[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    """Returns per-device, trip-weighted: collective bytes by kind + dot flops."""
+    comps = _split_computations(hlo)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def resolve_bytes(comp: _Comp, names: List[str]) -> int:
+        total = 0
+        for n in names:
+            sh = comp.shapes.get(n) or comp.params.get(n)
+            if sh:
+                total += _shape_bytes_list(sh)
+        return total
+
+    def analyze(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = collections.defaultdict(float)  # cycle guard
+        comp = comps.get(name)
+        total = collections.defaultdict(float)
+        if comp is None:
+            memo[name] = {}
+            return memo[name]
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            rhs = dm.group(2) if dm else line
+            opcode_m = re.match(r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?|\s|,)*([\w\-]+)\(", rhs)
+            opcode = opcode_m.group(1) if opcode_m else ""
+            handled_sub = False
+            if opcode.endswith("-done"):
+                continue
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVE_KINDS:
+                total[base] += resolve_bytes(comp, _operand_names(rhs, opcode))
+            elif base == "dot":
+                total["dot_flops"] += _dot_flops(comp, rhs)
+            elif base == "while":
+                calls = dict((a, n) for a, n in _called(rhs))
+                trips = 1
+                tm = _TRIP_RE.search(rhs)
+                if tm:
+                    trips = int(tm.group(1))
+                elif "condition" in calls:
+                    for ln in comps.get(calls["condition"], _Comp()).lines:
+                        for cm in re.finditer(r"constant\((\d+)\)", ln):
+                            trips = max(trips, int(cm.group(1)))
+                if "body" in calls:
+                    for k, v in analyze(calls["body"]).items():
+                        total[k] += v * trips
+                handled_sub = True
+            if not handled_sub:
+                for attr, sub in _called(rhs):
+                    if attr in ("body", "condition"):
+                        continue
+                    for k, v in analyze(sub).items():
+                        total[k] += v
+        memo[name] = dict(total)
+        return memo[name]
+
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    if m:
+        entry = m.group(1)
+    out = analyze(entry) if entry and entry in comps else {}
+    result = {k: float(v) for k, v in out.items()}
+    result["collective_total"] = float(
+        sum(v for k, v in result.items() if k in COLLECTIVE_KINDS))
+    result.setdefault("dot_flops", 0.0)
+    return result
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    r = analyze_hlo(hlo)
+    out = {k: v for k, v in r.items() if k in COLLECTIVE_KINDS}
+    out["total"] = r["collective_total"]
+    return out

@@ -1,0 +1,9 @@
+"""Target-hardware constants for roofline analysis (TPU v5e per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip, bf16
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip injection, ~1 link)
+HBM_BYTES = 16 * 1024**3     # 16 GiB per chip
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

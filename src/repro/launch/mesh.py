@@ -1,0 +1,25 @@
+"""Production meshes. 16x16 = one v5e pod (256 chips); 2x16x16 = two pods.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default (16,16) / (2,16,16); ``shape`` overrides the per-pod (data,
+    model) factorization (perf knob: e.g. (32, 8) for 40-head archs whose
+    heads don't divide 16 — see EXPERIMENTS.md §Perf)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    elif multi_pod:
+        shape = (2,) + tuple(shape)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(tuple(shape), axes)
+
+
+def make_dev_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (subprocess with fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,103 @@
+"""Blockwise (flash-style) attention in pure JAX + decode-step attention.
+
+Never materializes the full (Sq, Skv) score matrix: scans KV blocks with an
+online-softmax carry. Supports GQA (q heads grouped over kv heads), causal,
+causal+sliding-window, and full (cross) attention. This is the memory-safe
+substrate required for the 32k prefill shapes; kernel-level flash is a
+documented perf-iteration candidate (the roofline shows whether it is worth
+it on TPU — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _block_bias(q_pos, k_pos, kind: str, window: Optional[int]):
+    if kind == "full":
+        return None
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(q, k, v, *, kind: str = "causal", window: Optional[int] = None,
+              q_offset=0, kv_block: int = 1024, softmax_scale: Optional[float] = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = G * KV.
+
+    Returns (B, Sq, H, D). ``q_offset`` shifts query positions (prefill
+    continuation). Scans over KV blocks with an online-softmax carry.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    assert g * kvh == h, (h, kvh)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(d)
+
+    kv_block = min(kv_block, skv)
+    while skv % kv_block:  # largest divisor of skv <= requested block
+        kv_block -= 1
+    nkv = skv // kv_block
+
+    qg = q.reshape(b, sq, kvh, g, d)
+    kb = k.reshape(b, nkv, kv_block, kvh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nkv, kv_block, kvh, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kblk, vblk, bi = blk  # (B, kvb, KV, D), (B, kvb, KV, D), ()
+        k_pos = bi * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        bias = _block_bias(q_pos, k_pos, kind, window)
+        if bias is not None:
+            s = s + bias  # (Sq, kvb) broadcast over (b, kv, g)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(q.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kb, vb, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window: Optional[int] = None,
+                     softmax_scale: Optional[float] = None):
+    """Single-token attention over a KV cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); ``length``: number of
+    valid cache entries (the new token's k/v must already be inserted).
+    """
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+    sc = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    ok = pos[None, :] < length
+    if window is not None:
+        ok &= pos[None, :] > (length - 1 - window)
+    sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,154 @@
+"""Shared layer primitives + parameter-definition infrastructure.
+
+Parameters are plain nested dicts of jax arrays. Shapes/logical axes are
+declared via ``ParamDef`` trees so the same definition serves:
+
+* real initialization (CPU smoke tests / the end-to-end driver),
+* shape-only ``ShapeDtypeStruct`` trees + ``PartitionSpec`` trees for the
+  multi-pod dry-run (no allocation),
+* optimizer-state construction (mirrors the param tree).
+
+Logical axis names are mapped to mesh axes by ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names, len == ndim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                      # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def tree_map_defs(fn, tree):
+    """Map over ParamDef leaves of a nested dict."""
+    if isinstance(tree, ParamDef):
+        return fn(tree)
+    return {k: tree_map_defs(fn, v) for k, v in tree.items()}
+
+
+def init_params(defs, key) -> Dict:
+    """Materialize a ParamDef tree (for smoke tests / real training)."""
+    leaves = []
+
+    def collect(d):
+        leaves.append(d)
+        return d
+
+    tree_map_defs(collect, defs)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def make(d: ParamDef):
+        i = next(it)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        std = d.scale
+        if d.init == "small":
+            std = d.scale / math.sqrt(max(d.shape[0], 1))
+        return (jax.random.normal(keys[i], d.shape, jnp.float32) * std).astype(d.dtype)
+
+    return tree_map_defs(make, defs)
+
+
+def shape_tree(defs):
+    """ShapeDtypeStruct tree — the dry-run stand-in (no allocation)."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def axes_tree(defs):
+    return tree_map_defs(lambda d: d.axes, defs)
+
+
+def stack_defs(defs, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacked (scan) layer axis to every leaf."""
+    return tree_map_defs(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.dtype,
+                           d.init, d.scale),
+        defs)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...e,ef->...f", x, w_gate)
+    u = jnp.einsum("...e,ef->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fe->...e", h, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jnp.einsum("...e,ef->...f", x, w_up) + b_up
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fe->...e", h, w_down) + b_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim: Optional[int] = None):
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (np.arange(0, rd, 2, dtype=np.float64) / rd))
+    return jnp.asarray(inv, dtype=jnp.float32)  # (rd//2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               rotary_dim: Optional[int] = None):
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    ``rotary_dim < D`` rotates only the first ``rotary_dim`` features
+    (ChatGLM-style "2d" partial rotary); the rest pass through.
+    """
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    inv = rope_freqs(d, theta, rd)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rd//2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), xp], axis=-1)
+
+
+def causal_mask_bias(q_pos, k_pos, window: Optional[int] = None):
+    """Additive mask bias (0 / -inf) for causal (+ optional local window)."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)

@@ -1,0 +1,170 @@
+"""Model facade: ArchConfig -> parameter defs, loss, prefill, decode.
+
+All entry points are pure functions of (cfg, params, inputs) suitable for
+``jax.jit`` + AOT ``.lower().compile()`` in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import (activation_constrainer, dp_size,
+                                 moe_buffer_constrainer)
+from .layers import ParamDef, init_params, rms_norm, layer_norm, shape_tree, axes_tree
+from .transformer import (run_stack, stack_cache_defs, stack_defs_tree)
+
+
+def _make_ctx(cfg: "ArchConfig", mode: str, mesh, pos) -> Dict:
+    return {"mode": mode, "pos": pos, "mesh": mesh,
+            "constrain": activation_constrainer(
+                mesh, seq_parallel=getattr(cfg, "seq_parallel", False)),
+            "constrain_moe": moe_buffer_constrainer(mesh),
+            "dp_groups": dp_size(mesh)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def model_defs(cfg: ArchConfig) -> Dict:
+    dt = cfg.dtype
+    defs: Dict = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dt),
+        "stack": stack_defs_tree(cfg),
+    }
+    if cfg.norm == "ln":
+        defs["final_scale"] = ParamDef((cfg.d_model,), ("embed",), dt, "ones")
+        defs["final_bias"] = ParamDef((cfg.d_model,), ("embed",), dt, "zeros")
+    else:
+        defs["final_scale"] = ParamDef((cfg.d_model,), ("embed",), dt, "zeros")
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dt)
+    if cfg.is_encdec:
+        defs["enc_stack"] = stack_defs_tree(
+            cfg, pattern=cfg.enc_pattern, n_periods=cfg.n_enc_periods,
+            prefix=(), tail=())
+        defs["enc_final_scale"] = ParamDef((cfg.d_model,), ("embed",), dt, "zeros")
+    return defs
+
+
+def model_cache_defs(cfg: ArchConfig, batch: int, cache_len: int) -> Dict:
+    return stack_cache_defs(cfg, batch, cache_len)
+
+
+def init(cfg: ArchConfig, key) -> Dict:
+    return init_params(model_defs(cfg), key)
+
+
+def param_shapes(cfg: ArchConfig):
+    return shape_tree(model_defs(cfg))
+
+
+def param_axes(cfg: ArchConfig):
+    return axes_tree(model_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _final_norm(cfg, params, x, prefix=""):
+    if cfg.norm == "ln":
+        return layer_norm(x, params[f"{prefix}final_scale"], params[f"{prefix}final_bias"])
+    return rms_norm(x, params[f"{prefix}final_scale"])
+
+
+def _head(cfg, params, x):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bse,ve->bsv", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def _encode(cfg, params, src, ctx):
+    """Run the encoder stack over stub source embeddings (audio)."""
+    x, _, _ = run_stack(cfg, params["enc_stack"], src,
+                        {**ctx, "mode": "train", "pos": 0},
+                        pattern=cfg.enc_pattern, n_periods=cfg.n_enc_periods,
+                        prefix=(), tail=())
+    return rms_norm(x, params["enc_final_scale"])
+
+
+def _enc_states(cfg, params, batch: Dict, ctx):
+    """Cross-attention memory: encoder output (audio) or raw patch embeds (vlm)."""
+    if cfg.is_encdec:
+        return _encode(cfg, params, batch["src"], ctx)
+    if cfg.family == "vlm":
+        return batch["src"]
+    return None
+
+
+def forward(cfg: ArchConfig, params: Dict, batch: Dict, *, mode: str = "train",
+            mesh=None):
+    """batch: {"tokens": (B,S) int32, optional "src": (B,Ssrc,E)}.
+
+    Returns (logits (B,S,V) f32, caches-or-None, aux).
+    """
+    ctx = _make_ctx(cfg, mode, mesh, jnp.zeros((), jnp.int32))
+    ctx["enc"] = _enc_states(cfg, params, batch, ctx)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x, caches, aux = run_stack(cfg, params["stack"], x, ctx)
+    x = _final_norm(cfg, params, x)
+    logits = _head(cfg, params, x)
+    return logits, caches, aux
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict, *, mesh=None):
+    """Causal-LM cross entropy (+ MoE aux). batch needs "labels" (B,S)."""
+    logits, _, aux = forward(cfg, params, batch, mode="train", mesh=mesh)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params: Dict, batch: Dict, *, mesh=None):
+    """Full-sequence forward emitting decode caches + last-position logits."""
+    logits, caches, _ = forward(cfg, params, batch, mode="prefill", mesh=mesh)
+    return logits[:, -1:], caches
+
+
+def grow_caches(caches: Dict, old_len: int, new_len: int) -> Dict:
+    """Extend KV caches from ``old_len`` to ``new_len`` positions.
+
+    Scanned caches carry a leading layer axis (layers, B, S, ...): their
+    sequence axis is 2; prefix/tail caches use axis 1. Only leaves whose
+    sequence axis currently equals ``old_len`` are padded (SSM/RG-LRU
+    state and conv leaves are length-independent and pass through).
+    """
+    pad = new_len - old_len
+    if pad <= 0:
+        return caches
+
+    def pad_leaf(x, axis):
+        if x.ndim > axis and x.shape[axis] == old_len:
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, pad)
+            return jnp.pad(x, widths)
+        return x
+
+    out = {}
+    for group, sub in caches.items():
+        axis = 2 if group == "scan" else 1
+        out[group] = jax.tree.map(lambda x: pad_leaf(x, axis), sub)
+    return out
+
+
+def decode_step(cfg: ArchConfig, params: Dict, caches: Dict, tokens, pos,
+                *, mesh=None):
+    """One-token decode. tokens: (B,1) int32; pos: () int32 = # valid tokens.
+
+    Returns (logits (B,1,V), new_caches).
+    """
+    ctx = _make_ctx(cfg, "decode", mesh, pos)
+    ctx["enc"] = None
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, new_caches, _ = run_stack(cfg, params["stack"], x, ctx, caches)
+    x = _final_norm(cfg, params, x)
+    return _head(cfg, params, x), new_caches

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Dispatch is **DP-group-local** (perf iteration #1, EXPERIMENTS.md §Perf):
+tokens arrive as ``(groups, T_local, d_model)`` with ``groups`` = the
+data-parallel world size, sharded over the dp axes. Routing, sorting and
+the capacity scatter are vmapped over the group axis, so they never index
+across groups — GSPMD keeps them communication-free. The expert einsum runs
+on a ``(group -> dp, expert -> model)`` 2D-sharded buffer against
+model-sharded expert weights, i.e. each (dp, ep) device pair processes its
+own tokens through its own expert slice (standard EP x DP).
+
+The naive formulation (global token indices into the full (T, E) array)
+made GSPMD replicate the whole token activation per MoE layer —
+measured at ~84% of all collective bytes for kimi-k2 before this change.
+
+The (token-slot <-> expert-slot) relayout this implements is the
+distributed-BP pattern of DESIGN.md §3; the sort handles the data-dependent
+part, the BMMC algebra the static part.
+
+Sort-based dispatch scales to 384-expert configs (kimi-k2) where a dense
+one-hot dispatch tensor (T x X x C) would be infeasible.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def router_topk(logits, k: int):
+    """logits: (T, X) f32. Returns (weights (T,k), ids (T,k), aux_loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, ids = jax.lax.top_k(probs, k)
+    weights = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: X * mean_x(frac_tokens_x * mean_prob_x)
+    x = logits.shape[-1]
+    frac = jnp.zeros((x,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = frac / jnp.maximum(frac.sum(), 1.0)
+    aux = x * jnp.sum(frac * probs.mean(0))
+    return weights.astype(jnp.float32), ids, aux
+
+
+def _dispatch_group(x, router_w, *, top_k: int, cap: int, xn: int):
+    """Per-group routing + capacity pack. x: (T_local, E).
+
+    Returns (buf (X*C, E), slot, tok_sorted, w_sorted, keep, aux).
+    """
+    t, e = x.shape
+    logits = jnp.einsum("te,ex->tx", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    weights, ids, aux = router_topk(logits, top_k)
+
+    flat_ids = ids.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_ids)
+    eid_sorted = jnp.take(flat_ids, order)
+    tok_sorted = order // top_k                      # token per sorted slot
+    w_sorted = jnp.take(weights.reshape(-1), order)
+
+    starts = jnp.searchsorted(eid_sorted, jnp.arange(xn), side="left")
+    pos = jnp.arange(t * top_k) - jnp.take(starts, eid_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, eid_sorted * cap + pos, xn * cap)  # OOB -> dropped
+
+    buf = jnp.zeros((xn * cap, e), x.dtype)
+    buf = buf.at[slot].set(jnp.take(x, tok_sorted, axis=0), mode="drop")
+    return buf, slot, tok_sorted, w_sorted, keep, aux
+
+
+def _combine_group(yexp, slot, tok_sorted, w_sorted, keep, t):
+    """Per-group un-permute + weighted sum. yexp: (X*C, E)."""
+    e = yexp.shape[-1]
+    y_sorted = jnp.take(yexp, jnp.minimum(slot, yexp.shape[0] - 1), axis=0)
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    y_sorted = y_sorted * w_sorted[:, None].astype(yexp.dtype)
+    return jnp.zeros((t, e), yexp.dtype).at[tok_sorted].add(y_sorted)
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+            capacity_factor: float = 1.25,
+            constrain_buf: Optional[Callable] = None):
+    """x: (G, T_local, E) grouped tokens. Expert weights: (X, E, F) etc.
+
+    Returns (out (G, T_local, E), aux_loss). Tokens beyond per-group expert
+    capacity are dropped (standard capacity-based MoE semantics).
+    """
+    g, t, e = x.shape
+    xn = router_w.shape[1]
+    cap = int(np.ceil(top_k * t * capacity_factor / xn))
+    cap = max(8, int(np.ceil(cap / 8)) * 8)
+    cap = min(cap, t * top_k)
+
+    buf, slot, tok_sorted, w_sorted, keep, aux = jax.vmap(
+        lambda xg: _dispatch_group(xg, router_w, top_k=top_k, cap=cap, xn=xn)
+    )(x)
+    buf = buf.reshape(g, xn, cap, e)
+    if constrain_buf is not None:
+        buf = constrain_buf(buf)
+
+    gate = jnp.einsum("gxce,xef->gxcf", buf, w_gate)
+    up = jnp.einsum("gxce,xef->gxcf", buf, w_up)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    yexp = jnp.einsum("gxcf,xfe->gxce", h, w_down)
+    if constrain_buf is not None:
+        yexp = constrain_buf(yexp)
+    yexp = yexp.reshape(g, xn * cap, e)
+
+    out = jax.vmap(_combine_group, in_axes=(0, 0, 0, 0, 0, None))(
+        yexp, slot, tok_sorted, w_sorted, keep, t)
+    return out, aux.mean()

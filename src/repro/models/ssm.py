@@ -1,0 +1,175 @@
+"""State-space blocks: Mamba-2 SSD (state-space duality) and RG-LRU.
+
+Mamba-2 (arXiv:2405.21060): chunked SSD — intra-chunk quadratic attention-
+like term + inter-chunk linear recurrence over chunk states (lax.scan).
+RG-LRU (RecurrentGemma, arXiv:2402.19427): gated linear recurrence computed
+with ``lax.associative_scan`` (log-depth, TPU-friendly).
+
+Sequence-to-chunk blocking in SSD is a BP map on sequence index bits
+(seq -> (chunks, chunk)); with power-of-two chunks it routes through the
+BMMC planner's row view (see DESIGN.md §4 Arch-applicability). The inner
+recurrences are not permutations — the paper's technique is inapplicable
+there and they are plain JAX.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt_a, b, c, *, chunk: int = 256, return_final_state: bool = False):
+    """Chunked state-space duality forward pass.
+
+    x: (B, L, H, P) head inputs (already dt-weighted by the caller)
+    dt_a: (B, L, H) per-step log decay (A * dt, <= 0)
+    b, c: (B, L, G, N) input/output projections (G groups, heads share)
+    Returns y: (B, L, H, P) [and the final SSM state (B, H, P, N) if asked —
+    the decode-continuation carry, free from the inter-chunk scan].
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        # no-op padding: x/b/c = 0 contribute nothing to states, and
+        # dt_a = 0 => decay exp(0) = 1 passes state through unchanged.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = dt_a.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    # intra-chunk ("diagonal") term: attention-like with decay kernel L
+    lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))        # (B,nc,H,q,q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc,
+                        preferred_element_type=jnp.float32)   # (B,nc,G,q,k)
+    scores = scores.reshape(bsz, nc, g, 1, chunk, chunk)
+    lmat = lmat.reshape(bsz, nc, g, hg, chunk, chunk)
+    w = (scores * lmat).reshape(bsz, nc, h, chunk, chunk)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states: S_c = sum_j exp(cum_last - cum_j) B_j (x) x_j
+    cum = jnp.cumsum(ac, axis=2)                              # (B,nc,q,H)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,q,H)
+    bh = jnp.repeat(bc, hg, axis=3) if g != h else bc          # (B,nc,q,H,N)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bh, decay_states.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp                                          # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+
+    # off-diagonal contribution: y_i += C_i . (decay_i * S_prev)
+    state_decay = jnp.exp(cum)                                  # (B,nc,q,H)
+    ch = jnp.repeat(cc, hg, axis=3) if g != h else cc           # (B,nc,q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, s_prevs.astype(x.dtype),
+                       state_decay.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(bsz, lp, h, p)[:, :l]
+    if return_final_state:
+        return y.astype(x.dtype), s_final
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_a_t, b_t, c_t):
+    """One-token SSD update. state: (B,H,P,N) f32.
+
+    x_t: (B,H,P); dt_a_t: (B,H); b_t, c_t: (B,G,N).
+    Returns (new_state, y_t (B,H,P)).
+    """
+    bsz, h, p, n = state.shape
+    g = b_t.shape[1]
+    hg = h // g
+    bh = jnp.repeat(b_t, hg, axis=1) if g != h else b_t        # (B,H,N)
+    ch = jnp.repeat(c_t, hg, axis=1) if g != h else c_t
+    dec = jnp.exp(dt_a_t)[..., None, None]                      # (B,H,1,1)
+    new_state = state * dec + jnp.einsum("bhp,bhn->bhpn", x_t, bh).astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state.astype(x_t.dtype), ch)
+    return new_state, y
+
+
+def causal_conv1d(x, w, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, L, C); w: (K, C); prev: (B, K-1, C)."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k))
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else prev
+    return out, new_prev
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru(x, gate_a, gate_x, a_param, h0: Optional[jax.Array] = None):
+    """Real-gated LRU scan. x, gate_a, gate_x: (B, L, D); a_param: (D,).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    with a_t = exp(-c * softplus(a_param) * sigmoid(gate_a)).
+    Computed with an associative scan; ``h0`` carries decode state.
+    """
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param.astype(jnp.float32)) \
+        * jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(state, x_t, gate_a_t, gate_x_t, a_param):
+    """One-token RG-LRU update. state: (B, D) f32."""
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param.astype(jnp.float32)) \
+        * jax.nn.sigmoid(gate_a_t.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(gate_x_t.astype(jnp.float32)) * x_t.astype(jnp.float32)
+    h = a * state + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return h, h.astype(x_t.dtype)

@@ -1,0 +1,520 @@
+"""Block definitions + period-scanned stack executor for all arch families.
+
+Block kinds:
+  dense  — self-attn (GQA, RoPE) + MLP
+  local  — sliding-window self-attn + MLP
+  moe    — self-attn + mixture-of-experts FFN (+ optional shared experts)
+  cross  — gated cross-attention to stub patch/frame embeddings + MLP (VLM)
+  enc    — bidirectional self-attn + MLP (encoder)
+  dec    — causal self-attn + cross-attn + MLP (enc-dec decoder)
+  rec    — RG-LRU recurrent block + MLP (RecurrentGemma)
+  mamba  — Mamba-2 SSD block
+
+The stack is ``prefix + pattern * n_periods + tail``; the repeated pattern
+runs under ``lax.scan`` with stacked parameters so HLO size is depth-
+independent (critical for the 100-layer VLM / 61-layer 1T-MoE dry-runs),
+optionally rematerialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .layers import (ParamDef, apply_rope, layer_norm, rms_norm, stack_defs,
+                     tree_map_defs)
+from .attention import attention, decode_attention
+from .moe import moe_ffn
+from .ssm import (causal_conv1d, rglru, rglru_step, ssd_chunked,
+                  ssd_decode_step)
+
+# ---------------------------------------------------------------------------
+# Parameter definitions per block kind
+# ---------------------------------------------------------------------------
+
+
+def _norm_defs(cfg, name):
+    if cfg.norm == "ln":
+        return {f"{name}_scale": ParamDef((cfg.d_model,), ("embed",), cfg.dtype, "ones"),
+                f"{name}_bias": ParamDef((cfg.d_model,), ("embed",), cfg.dtype, "zeros")}
+    return {f"{name}_scale": ParamDef((cfg.d_model,), ("embed",), cfg.dtype, "zeros")}
+
+
+def _apply_norm(cfg, p, name, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"])
+    return rms_norm(x, p[f"{name}_scale"])
+
+
+def _attn_defs(cfg: ArchConfig, prefix: str = "") -> Dict[str, ParamDef]:
+    e, h, kv, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    defs = {
+        f"{prefix}wq": ParamDef((e, h, d), ("embed", "heads", "head_dim"), dt),
+        f"{prefix}wk": ParamDef((e, kv, d), ("embed", "kv_heads", "head_dim"), dt),
+        f"{prefix}wv": ParamDef((e, kv, d), ("embed", "kv_heads", "head_dim"), dt),
+        f"{prefix}wo": ParamDef((h, d, e), ("heads", "head_dim", "embed"), dt, "small"),
+    }
+    if cfg.qkv_bias:
+        defs[f"{prefix}bq"] = ParamDef((h, d), ("heads", "head_dim"), dt, "zeros")
+        defs[f"{prefix}bk"] = ParamDef((kv, d), ("kv_heads", "head_dim"), dt, "zeros")
+        defs[f"{prefix}bv"] = ParamDef((kv, d), ("kv_heads", "head_dim"), dt, "zeros")
+    return defs
+
+
+def _mlp_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    e, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    if cfg.mlp == "gelu":
+        return {
+            "w_up": ParamDef((e, f), ("embed", "mlp"), dt),
+            "b_up": ParamDef((f,), ("mlp",), dt, "zeros"),
+            "w_down": ParamDef((f, e), ("mlp", "embed"), dt, "small"),
+            "b_down": ParamDef((e,), ("embed",), dt, "zeros"),
+        }
+    return {
+        "w_gate": ParamDef((e, f), ("embed", "mlp"), dt),
+        "w_up": ParamDef((e, f), ("embed", "mlp"), dt),
+        "w_down": ParamDef((f, e), ("mlp", "embed"), dt, "small"),
+    }
+
+
+def _moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    e, f, x, dt = cfg.d_model, cfg.moe_d_ff, cfg.n_experts, cfg.dtype
+    defs = {
+        "router": ParamDef((e, x), ("embed", None), jnp.float32, "normal", 0.006),
+        "we_gate": ParamDef((x, e, f), ("experts", "embed", None), dt),
+        "we_up": ParamDef((x, e, f), ("experts", "embed", None), dt),
+        "we_down": ParamDef((x, f, e), ("experts", None, "embed"), dt, "small"),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs.update({
+            "ws_gate": ParamDef((e, fs), ("embed", "mlp"), dt),
+            "ws_up": ParamDef((e, fs), ("embed", "mlp"), dt),
+            "ws_down": ParamDef((fs, e), ("mlp", "embed"), dt, "small"),
+        })
+    return defs
+
+
+def _mamba_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    e, dt = cfg.d_model, cfg.dtype
+    di = cfg.ssm_expand * e
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    k = cfg.ssm_conv
+    conv_ch = di + 2 * n
+    return {
+        "w_z": ParamDef((e, di), ("embed", "mlp"), dt),
+        "w_x": ParamDef((e, di), ("embed", "mlp"), dt),
+        "w_b": ParamDef((e, n), ("embed", "state"), dt),
+        "w_c": ParamDef((e, n), ("embed", "state"), dt),
+        "w_dt": ParamDef((e, nh), ("embed", None), dt),
+        "dt_bias": ParamDef((nh,), (None,), jnp.float32, "zeros"),
+        "a_log": ParamDef((nh,), (None,), jnp.float32, "ones"),
+        "d_skip": ParamDef((nh,), (None,), jnp.float32, "ones"),
+        "conv_w": ParamDef((k, conv_ch), (None, "mlp"), dt, "normal", 0.1),
+        "norm_y": ParamDef((di,), ("mlp",), dt, "zeros"),
+        "w_out": ParamDef((di, e), ("mlp", "embed"), dt, "small"),
+    }
+
+
+def _rec_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    e, dt = cfg.d_model, cfg.dtype
+    w = cfg.lru_width or e
+    k = cfg.ssm_conv
+    return {
+        "w_xb": ParamDef((e, w), ("embed", "mlp"), dt),
+        "w_gateb": ParamDef((e, w), ("embed", "mlp"), dt),
+        "conv_w": ParamDef((k, w), (None, "mlp"), dt, "normal", 0.1),
+        "w_gate_a": ParamDef((w, w), ("mlp", None), dt, "small"),
+        "w_gate_x": ParamDef((w, w), ("mlp", None), dt, "small"),
+        "a_param": ParamDef((w,), ("mlp",), jnp.float32, "ones"),
+        "w_out": ParamDef((w, e), ("mlp", "embed"), dt, "small"),
+    }
+
+
+def block_defs(cfg: ArchConfig, kind: str) -> Dict[str, ParamDef]:
+    d: Dict[str, ParamDef] = {}
+    if kind in ("dense", "local", "moe", "enc", "dec"):
+        d.update(_norm_defs(cfg, "ln_attn"))
+        d.update(_attn_defs(cfg))
+    if kind == "dec":
+        d.update(_norm_defs(cfg, "ln_cross"))
+        d.update(_attn_defs(cfg, prefix="c_"))
+    if kind == "cross":
+        d.update(_norm_defs(cfg, "ln_attn"))
+        d.update(_attn_defs(cfg))
+        d["attn_gate"] = ParamDef((1,), (None,), jnp.float32, "zeros")
+        d["mlp_gate"] = ParamDef((1,), (None,), jnp.float32, "zeros")
+    if kind in ("dense", "local", "cross", "enc", "dec"):
+        d.update(_norm_defs(cfg, "ln_mlp"))
+        d.update(_mlp_defs(cfg))
+    if kind == "moe":
+        d.update(_norm_defs(cfg, "ln_mlp"))
+        d.update(_moe_defs(cfg))
+    if kind == "mamba":
+        d.update(_norm_defs(cfg, "ln_attn"))
+        d.update(_mamba_defs(cfg))
+    if kind == "rec":
+        d.update(_norm_defs(cfg, "ln_attn"))
+        d.update(_rec_defs(cfg))
+        d.update({k2: v for k2, v in _norm_defs(cfg, "ln_mlp").items()})
+        d.update(_mlp_defs(cfg))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (decode/prefill state per block)
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ArchConfig, kind: str, batch: int, cache_len: int) -> Dict:
+    kv, dd, dt = cfg.n_kv_heads, cfg.hd, cfg.dtype
+    kvax = ("batch", "seq_kv", "kv_heads", None)  # seq-sharded cache (SP):
+    # kv_heads rarely divide the model axis (2/4/8 heads vs 16 shards), so
+    # the cache sequence dim carries the model-axis sharding for decode.
+    if kind in ("dense", "local", "moe", "enc"):
+        if kind == "enc":
+            return {}
+        return {"k": ParamDef((batch, cache_len, kv, dd), kvax, dt, "zeros"),
+                "v": ParamDef((batch, cache_len, kv, dd), kvax, dt, "zeros")}
+    if kind == "dec":
+        src = max(cfg.src_len, 1)
+        return {"k": ParamDef((batch, cache_len, kv, dd), kvax, dt, "zeros"),
+                "v": ParamDef((batch, cache_len, kv, dd), kvax, dt, "zeros"),
+                "ck": ParamDef((batch, src, kv, dd), kvax, dt, "zeros"),
+                "cv": ParamDef((batch, src, kv, dd), kvax, dt, "zeros")}
+    if kind == "cross":
+        src = max(cfg.src_len, 1)
+        return {"ck": ParamDef((batch, src, kv, dd), kvax, dt, "zeros"),
+                "cv": ParamDef((batch, src, kv, dd), kvax, dt, "zeros")}
+    if kind == "mamba":
+        di = cfg.ssm_expand * cfg.d_model
+        nh = di // cfg.ssm_headdim
+        conv_ch = di + 2 * cfg.ssm_state
+        return {"conv": ParamDef((batch, cfg.ssm_conv - 1, conv_ch), ("batch", None, "mlp"), dt, "zeros"),
+                "state": ParamDef((batch, nh, cfg.ssm_headdim, cfg.ssm_state),
+                                  ("batch", None, None, "state"), jnp.float32, "zeros")}
+    if kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": ParamDef((batch, cfg.ssm_conv - 1, w), ("batch", None, "mlp"), dt, "zeros"),
+                "h": ParamDef((batch, w), ("batch", "mlp"), jnp.float32, "zeros")}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x, prefix=""):
+    q = jnp.einsum("bse,ehd->bshd", x, p[f"{prefix}wq"])
+    k = jnp.einsum("bse,ehd->bshd", x, p[f"{prefix}wk"])
+    v = jnp.einsum("bse,ehd->bshd", x, p[f"{prefix}wv"])
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}bq"]
+        k = k + p[f"{prefix}bk"]
+        v = v + p[f"{prefix}bv"]
+    return q, k, v
+
+
+def _self_attn(cfg, p, x, ctx, *, window=None, kind_attn="causal", cache=None):
+    """Returns (attn_out, new_cache_kv)."""
+    mode = ctx["mode"]
+    q, k, v = _project_qkv(cfg, p, x)
+    rd = int(cfg.hd * cfg.rotary_frac) if cfg.rotary_frac < 1.0 else None
+    if kind_attn != "full":  # positional only for causal self-attn
+        pos = ctx["pos"] + jnp.arange(x.shape[1])
+        q = apply_rope(q, pos, cfg.rope_theta, rd)
+        k = apply_rope(k, pos, cfg.rope_theta, rd)
+    if mode == "decode":
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, ctx["pos"], axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, ctx["pos"], axis=1)
+        out = decode_attention(q, kc, vc, ctx["pos"] + 1, window=window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = attention(q, k, v, kind=kind_attn, window=window,
+                        kv_block=cfg.kv_block)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"])
+    return y, new_cache
+
+
+def _cross_attn(cfg, p, x, ctx, prefix="", cache=None):
+    mode = ctx["mode"]
+    q = jnp.einsum("bse,ehd->bshd", x, p[f"{prefix}wq"])
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}bq"]
+    if mode == "decode":
+        k, v = cache["ck"], cache["cv"]
+        new_cache = {"ck": k, "cv": v}
+    else:
+        enc = ctx["enc"]
+        k = jnp.einsum("bse,ehd->bshd", enc, p[f"{prefix}wk"])
+        v = jnp.einsum("bse,ehd->bshd", enc, p[f"{prefix}wv"])
+        if cfg.qkv_bias:
+            k = k + p[f"{prefix}bk"]
+            v = v + p[f"{prefix}bv"]
+        new_cache = {"ck": k, "cv": v} if mode == "prefill" else None
+    out = attention(q, k, v, kind="full", kv_block=cfg.kv_block)
+    y = jnp.einsum("bshd,hde->bse", out, p[f"{prefix}wo"])
+    return y, new_cache
+
+
+def _mlp(cfg, p, x):
+    if cfg.mlp == "gelu":
+        h = jnp.einsum("bse,ef->bsf", x, p["w_up"]) + p["b_up"]
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+        return jnp.einsum("bsf,fe->bse", h, p["w_down"]) + p["b_down"]
+    g = jnp.einsum("bse,ef->bsf", x, p["w_gate"])
+    u = jnp.einsum("bse,ef->bsf", x, p["w_up"])
+    act = jax.nn.gelu if cfg.mlp == "geglu" else jax.nn.silu
+    h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fe->bse", h, p["w_down"])
+
+
+def _moe_block_ffn(cfg, p, x, ctx):
+    b, s, e = x.shape
+    mesh = ctx.get("mesh")
+    if (cfg.moe_impl == "a2a" and mesh is not None
+            and s % mesh.shape["model"] == 0
+            and cfg.n_experts % mesh.shape["model"] == 0):
+        from .moe_a2a import moe_ffn_a2a
+        out, aux = moe_ffn_a2a(x, p["router"], p["we_gate"], p["we_up"],
+                               p["we_down"], top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor, mesh=mesh)
+    else:
+        # "naive" = historical baseline: one global group (global token
+        # indices -> GSPMD replicates the token activation per layer)
+        groups = 1 if cfg.moe_impl == "naive" else ctx.get("dp_groups", 1)
+        if (b * s) % max(groups, 1):
+            groups = 1
+        grouped = x.reshape(groups, (b * s) // groups, e)
+        out, aux = moe_ffn(grouped, p["router"], p["we_gate"], p["we_up"],
+                           p["we_down"], top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           constrain_buf=ctx.get("constrain_moe"))
+        out = out.reshape(b, s, e)
+    if cfg.n_shared_experts:
+        g = jnp.einsum("bse,ef->bsf", x, p["ws_gate"])
+        u = jnp.einsum("bse,ef->bsf", x, p["ws_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        out = out + jnp.einsum("bsf,fe->bse", h, p["ws_down"])
+    return out, aux
+
+
+def _mamba_block(cfg, p, x, ctx, cache=None):
+    b, s, e = x.shape
+    di = cfg.ssm_expand * e
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    pdim = cfg.ssm_headdim
+    z = jnp.einsum("bse,ei->bsi", x, p["w_z"])
+    xi = jnp.einsum("bse,ei->bsi", x, p["w_x"])
+    bb = jnp.einsum("bse,en->bsn", x, p["w_b"])
+    cc = jnp.einsum("bse,en->bsn", x, p["w_c"])
+    dt = jnp.einsum("bse,eh->bsh", x, p["w_dt"])
+
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    prev = cache["conv"] if ctx["mode"] == "decode" else None
+    conv_out, conv_state = causal_conv1d(conv_in, p["conv_w"], prev)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xi, bb, cc = conv_out[..., :di], conv_out[..., di:di + n], conv_out[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (b,s,nh)
+    a = -jnp.exp(p["a_log"])                                          # (nh,)
+    dt_a = dt * a                                                     # (b,s,nh)
+    xh = xi.reshape(b, s, nh, pdim) * dt[..., None].astype(x.dtype)
+    bg = bb[:, :, None, :]                                            # (b,s,1,n)
+    cg = cc[:, :, None, :]
+
+    if ctx["mode"] == "decode":
+        state = cache["state"]
+        new_state, y = ssd_decode_step(state, xh[:, 0], dt_a[:, 0].astype(jnp.float32),
+                                       bg[:, 0], cg[:, 0])
+        y = y[:, None]                                                # (b,1,nh,p)
+        new_cache = {"conv": conv_state, "state": new_state}
+    else:
+        if ctx["mode"] == "prefill":
+            y, state = ssd_chunked(xh, dt_a, bg, cg, chunk=cfg.ssm_chunk,
+                                   return_final_state=True)
+            new_cache = {"conv": conv_state, "state": state}
+        else:
+            y = ssd_chunked(xh, dt_a, bg, cg, chunk=cfg.ssm_chunk)
+            new_cache = None
+    y = y + xh * p["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(b, -1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm_y"])
+    return jnp.einsum("bsi,ie->bse", y, p["w_out"]), new_cache
+
+
+def _rec_block(cfg, p, x, ctx, cache=None):
+    xb = jnp.einsum("bse,ew->bsw", x, p["w_xb"])
+    gate_b = jnp.einsum("bse,ew->bsw", x, p["w_gateb"])
+    prev = cache["conv"] if ctx["mode"] == "decode" else None
+    xc, conv_state = causal_conv1d(xb, p["conv_w"], prev)
+    ga = jnp.einsum("bsw,wv->bsv", xc, p["w_gate_a"])
+    gx = jnp.einsum("bsw,wv->bsv", xc, p["w_gate_x"])
+    if ctx["mode"] == "decode":
+        h_new, y = rglru_step(cache["h"], xc[:, 0], ga[:, 0], gx[:, 0], p["a_param"])
+        y = y[:, None]
+        new_cache = {"conv": conv_state, "h": h_new}
+    else:
+        h0 = None
+        y, h_last = rglru(xc, ga, gx, p["a_param"], h0)
+        new_cache = ({"conv": conv_state, "h": h_last.astype(jnp.float32)}
+                     if ctx["mode"] == "prefill" else None)
+    y = y * jax.nn.gelu(gate_b.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("bsw,we->bse", y, p["w_out"]), new_cache
+
+
+def block_apply(cfg: ArchConfig, kind: str, p: Dict, x, ctx,
+                cache: Optional[Dict] = None) -> Tuple[Any, Optional[Dict], Any]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    constrain = ctx.get("constrain", lambda v, _k="act": v)
+    x = constrain(x)
+    if kind in ("dense", "local", "moe"):
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        window = cfg.window if kind == "local" else None
+        a, kv_cache = _self_attn(cfg, p, h, ctx, window=window, cache=cache)
+        x = x + a
+        h = _apply_norm(cfg, p, "ln_mlp", x)
+        if kind == "moe":
+            m, aux = _moe_block_ffn(cfg, p, h, ctx)
+        else:
+            m = _mlp(cfg, p, h)
+        x = x + m
+        return x, kv_cache, aux
+    if kind == "enc":
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        a, _ = _self_attn(cfg, p, h, ctx, kind_attn="full")
+        x = x + a
+        x = x + _mlp(cfg, p, _apply_norm(cfg, p, "ln_mlp", x))
+        return x, None, aux
+    if kind == "dec":
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        a, kv_cache = _self_attn(cfg, p, h, ctx, cache=cache)
+        x = x + a
+        h = _apply_norm(cfg, p, "ln_cross", x)
+        ca, c_cache = _cross_attn(cfg, p, h, ctx, prefix="c_", cache=cache)
+        x = x + ca
+        x = x + _mlp(cfg, p, _apply_norm(cfg, p, "ln_mlp", x))
+        new_cache = None
+        if kv_cache is not None or c_cache is not None:
+            new_cache = {**(kv_cache or {}), **(c_cache or {})}
+        return x, new_cache, aux
+    if kind == "cross":
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        ca, c_cache = _cross_attn(cfg, p, h, ctx, cache=cache)
+        x = x + jnp.tanh(p["attn_gate"]).astype(x.dtype) * ca
+        m = _mlp(cfg, p, _apply_norm(cfg, p, "ln_mlp", x))
+        x = x + jnp.tanh(p["mlp_gate"]).astype(x.dtype) * m
+        return x, c_cache, aux
+    if kind == "mamba":
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        y, new_cache = _mamba_block(cfg, p, h, ctx, cache)
+        return x + y, new_cache, aux
+    if kind == "rec":
+        h = _apply_norm(cfg, p, "ln_attn", x)
+        y, new_cache = _rec_block(cfg, p, h, ctx, cache)
+        x = x + y
+        x = x + _mlp(cfg, p, _apply_norm(cfg, p, "ln_mlp", x))
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack: prefix (unrolled) + pattern x n_periods (scanned) + tail (unrolled)
+# ---------------------------------------------------------------------------
+
+def stack_defs_tree(cfg: ArchConfig, pattern=None, n_periods=None,
+                    prefix=None, tail=None) -> Dict:
+    pattern = cfg.pattern if pattern is None else pattern
+    n_periods = cfg.n_periods if n_periods is None else n_periods
+    prefix = cfg.prefix if prefix is None else prefix
+    tail = cfg.tail if tail is None else tail
+    period = {f"{j}_{k}": block_defs(cfg, k) for j, k in enumerate(pattern)}
+    tree = {"prefix": {f"{j}_{k}": block_defs(cfg, k) for j, k in enumerate(prefix)},
+            "tail": {f"{j}_{k}": block_defs(cfg, k) for j, k in enumerate(tail)}}
+    if n_periods:
+        tree["scan"] = stack_defs(period, n_periods, "layers")
+    return tree
+
+
+def stack_cache_defs(cfg: ArchConfig, batch: int, cache_len: int,
+                     pattern=None, n_periods=None, prefix=None, tail=None) -> Dict:
+    pattern = cfg.pattern if pattern is None else pattern
+    n_periods = cfg.n_periods if n_periods is None else n_periods
+    prefix = cfg.prefix if prefix is None else prefix
+    tail = cfg.tail if tail is None else tail
+    period = {f"{j}_{k}": cache_defs(cfg, k, batch, cache_len)
+              for j, k in enumerate(pattern)}
+    tree = {"prefix": {f"{j}_{k}": cache_defs(cfg, k, batch, cache_len)
+                       for j, k in enumerate(prefix)},
+            "tail": {f"{j}_{k}": cache_defs(cfg, k, batch, cache_len)
+                     for j, k in enumerate(tail)}}
+    if n_periods:
+        tree["scan"] = stack_defs(period, n_periods, "layers")
+    return tree
+
+
+def run_stack(cfg: ArchConfig, params: Dict, x, ctx,
+              caches: Optional[Dict] = None,
+              pattern=None, n_periods=None, prefix=None, tail=None):
+    """Returns (x, new_caches (or None), aux)."""
+    pattern = cfg.pattern if pattern is None else pattern
+    n_periods = cfg.n_periods if n_periods is None else n_periods
+    prefix = cfg.prefix if prefix is None else prefix
+    tail = cfg.tail if tail is None else tail
+    mode = ctx["mode"]
+    want_cache = mode in ("prefill", "decode")
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": {}, "tail": {}}
+
+    def seq_blocks(x, aux, names, pgroup, cgroup, out_group):
+        for name in names:
+            kind = name.split("_", 1)[1]
+            cache = cgroup.get(name) if cgroup else None
+            x, nc, a = block_apply(cfg, kind, pgroup[name], x, ctx, cache)
+            if want_cache:
+                out_group[name] = nc if nc is not None else {}
+            aux = aux + a
+        return x, aux
+
+    pre_names = [f"{j}_{k}" for j, k in enumerate(prefix)]
+    x, aux = seq_blocks(x, aux, pre_names, params.get("prefix", {}),
+                        (caches or {}).get("prefix"), new_caches["prefix"])
+
+    if n_periods:
+        period_names = [f"{j}_{k}" for j, k in enumerate(pattern)]
+
+        def body(carry, xs):
+            xx, aa = carry
+            pparams, pcaches = xs
+            outs = {}
+            for name in period_names:
+                kind = name.split("_", 1)[1]
+                cache = pcaches.get(name) if pcaches is not None else None
+                xx, nc, a = block_apply(cfg, kind, pparams[name], xx, ctx, cache)
+                outs[name] = nc if (nc is not None and want_cache) else {}
+                aa = aa + a
+            return (xx, aa), (outs if want_cache else {})
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        scan_caches = (caches or {}).get("scan")
+        xs = (params["scan"], scan_caches)
+        (x, aux), scan_out = jax.lax.scan(body, (x, aux), xs)
+        if want_cache:
+            new_caches["scan"] = scan_out
+
+    tail_names = [f"{j}_{k}" for j, k in enumerate(tail)]
+    x, aux = seq_blocks(x, aux, tail_names, params.get("tail", {}),
+                        (caches or {}).get("tail"), new_caches["tail"])
+    return x, (new_caches if want_cache else None), aux

@@ -1,0 +1,13 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    """Scale factor in [floor, 1]: linear warmup then cosine decay."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules (DP+FSDP / TP / EP / SP).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod. Rules:
+
+* ``batch``                    -> (pod,) data       (DP)
+* ``vocab, heads, kv_heads,
+  mlp, experts``               -> model             (TP / EP)
+* ``embed``                    -> (pod,) data       (FSDP parameter sharding;
+                                  optimizer states follow parameters)
+* everything else              -> replicated
+
+A **divisibility guard** drops a rule when the dimension is not divisible by
+the mesh-axis product (e.g. 36 heads or vocab 50280 on a 16-wide model axis
+fall back to replicated — recorded per-arch in EXPERIMENTS.md §Dry-run).
+Each mesh axis is used at most once per tensor (first dim wins).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_rules(mesh: Mesh, *, fsdp: bool = True):
+    dp = dp_axes(mesh)
+    rules = {
+        "batch": dp,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "seq_kv": ("model",),            # decode-cache sequence sharding (SP)
+        "mlp": ("model",),
+        "experts": ("model",),
+        "embed": dp if fsdp else (),
+        "state": (),
+        "head_dim": (),
+        "layers": (),
+        # 8-bit optimizer moments: flat blocks sharded over every axis
+        "opt_shard": (("pod",) if "pod" in mesh.axis_names else ()) + ("data", "model"),
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names], initial=1))
+
+
+def spec_for(mesh: Mesh, axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...], *, fsdp: bool = True,
+             min_shard: int = 2) -> P:
+    """PartitionSpec for a tensor with logical ``axes`` and ``shape``."""
+    rules = logical_rules(mesh, fsdp=fsdp)
+    used: set = set()
+    parts = []
+    for ax, dim in zip(axes, shape):
+        names = rules.get(ax, ()) if ax else ()
+        names = tuple(n for n in names if n not in used)
+        sz = _axis_size(mesh, names)
+        if names and sz > 1 and dim % sz == 0 and dim // sz >= min_shard:
+            parts.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_shardings(mesh: Mesh, shapes_tree, axes_tree, *, fsdp: bool = True):
+    """NamedSharding tree matching a ShapeDtypeStruct tree + axes tree.
+
+    Both trees are nested dicts with leaves at identical positions
+    (ShapeDtypeStruct vs logical-axes tuple).
+    """
+    def rec(s, a):
+        if isinstance(s, dict):
+            return {k: rec(s[k], a[k]) for k in s}
+        return NamedSharding(mesh, spec_for(mesh, a, s.shape, fsdp=fsdp))
+    return rec(shapes_tree, axes_tree)
+
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    dp = dp_axes(mesh)
+    sz = _axis_size(mesh, dp)
+    if sz > 1 and batch_size % sz == 0:
+        first = dp if len(dp) > 1 else dp[0]
+        return P(first, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def dp_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, dp_axes(mesh))
+
+
+def moe_buffer_constrainer(mesh: Optional[Mesh]):
+    """Constrain (G, X, C, E) MoE buffers to (dp, model, None, None)."""
+    if mesh is None:
+        return None
+    dp = dp_axes(mesh)
+    first = dp if len(dp) > 1 else dp[0]
+
+    def constrain(buf):
+        g, xn = buf.shape[0], buf.shape[1]
+        gspec = first if g % _axis_size(mesh, dp) == 0 else None
+        xspec = "model" if xn % mesh.shape["model"] == 0 else None
+        spec = P(gspec, xspec, *([None] * (buf.ndim - 2)))
+        return jax.lax.with_sharding_constraint(buf, NamedSharding(mesh, spec))
+    return constrain
+
+
+def activation_constrainer(mesh: Optional[Mesh], seq_parallel: bool = False):
+    """Constrain (B, S, E) activations at block boundaries.
+
+    Default: batch over the DP axes. With ``seq_parallel`` the sequence dim
+    is additionally sharded over ``model`` (Megatron-SP style): GSPMD then
+    lowers the TP activation all-reduces into reduce-scatter/all-gather
+    pairs whose exposed bytes halve (see EXPERIMENTS.md §Perf).
+    """
+    if mesh is None:
+        return lambda x: x
+
+    def constrain(x):
+        if x.ndim < 1:
+            return x
+        spec = batch_spec(mesh, x.shape[0], x.ndim)
+        if (seq_parallel and x.ndim == 3 and
+                x.shape[1] % mesh.shape["model"] == 0 and
+                x.shape[1] // mesh.shape["model"] >= 128):
+            spec = P(spec[0], "model", None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain

@@ -1,0 +1,67 @@
+"""Train step: loss + grads + (optionally 8-bit) AdamW update.
+
+Pure function of (params, opt_state, batch); gradient accumulation folds
+microbatches with a ``lax.scan`` so the peak activation footprint is one
+microbatch regardless of global batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update, state_shapes
+def make_train_step(cfg: ArchConfig, mesh=None,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    grad_accum: int = 1):
+    opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, mesh=mesh)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // grad_accum
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, mb) + x.shape[1:]), batch)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+        new_params, new_state = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **parts,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)))}
+        return new_params, new_state, metrics
+
+    return train_step, opt_cfg
+
+
+def init_opt(cfg: ArchConfig, params, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
+    return adamw_init(params, opt_cfg)
+
+
+def opt_state_shapes(cfg: ArchConfig, param_shapes,
+                     opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
+    return state_shapes(param_shapes, opt_cfg)

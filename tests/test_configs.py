@@ -1,0 +1,81 @@
+"""Guard the assigned architecture configs against drift (exact dims)."""
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs
+
+ASSIGNED = {
+    # name: (layers, d_model, heads, kv, d_ff-or-moe_d_ff, vocab)
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "mamba2-130m": (24, 768, 12, 12, 0, 50280),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+}
+
+
+def test_all_archs_registered():
+    assert set(list_archs()) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_dims(name):
+    layers, d, h, kv, ff, v = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.d_model == d and cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+    if name == "kimi-k2-1t-a32b":
+        assert cfg.moe_d_ff == ff and cfg.n_experts == 384 and cfg.top_k == 8
+        assert cfg.n_layers == layers
+    elif name == "phi3.5-moe-42b-a6.6b":
+        assert cfg.moe_d_ff == ff and cfg.n_experts == 16 and cfg.top_k == 2
+        assert cfg.n_layers == layers
+    elif name == "seamless-m4t-medium":
+        assert cfg.d_ff == ff
+        assert cfg.n_periods == layers and cfg.n_enc_periods == layers
+    elif name == "mamba2-130m":
+        assert cfg.ssm_state == 128 and cfg.n_layers == layers
+    else:
+        assert cfg.d_ff == ff and cfg.n_layers == layers
+
+
+def test_param_counts_near_published():
+    # total params within 15% of the published scale
+    published = {"starcoder2-7b": 7.2e9, "mistral-nemo-12b": 12.2e9,
+                 "qwen1.5-32b": 32.5e9, "chatglm3-6b": 6.2e9,
+                 "llama-3.2-vision-90b": 90e9, "recurrentgemma-2b": 2.7e9,
+                 "kimi-k2-1t-a32b": 1.0e12, "phi3.5-moe-42b-a6.6b": 41.9e9,
+                 "mamba2-130m": 130e6}
+    for name, want in published.items():
+        got = get_config(name).n_params()
+        assert abs(got - want) / want < 0.15, (name, got, want)
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 30e9 < kimi.n_active_params() < 45e9          # ~A32B
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert 5e9 < phi.n_active_params() < 8e9             # ~A6.6B
+
+
+def test_sub_quadratic_flags():
+    assert get_config("mamba2-130m").sub_quadratic
+    assert get_config("recurrentgemma-2b").sub_quadratic
+    for name in ("starcoder2-7b", "kimi-k2-1t-a32b", "seamless-m4t-medium"):
+        assert not get_config(name).sub_quadratic
+
+
+def test_layer_patterns():
+    rg = get_config("recurrentgemma-2b")
+    kinds = rg.layer_kinds
+    assert len(kinds) == 26 and kinds.count("local") == 8
+    lv = get_config("llama-3.2-vision-90b")
+    assert len(lv.layer_kinds) == 100
+    assert lv.layer_kinds.count("cross") == 20
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.layer_kinds[0] == "dense"
+    assert kimi.layer_kinds.count("moe") == 60

@@ -1,0 +1,75 @@
+"""Data pipeline (BMMC shuffle) and checkpoint/restore fault tolerance."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, ShardedLoader, epoch_bmmc
+
+
+def test_epoch_shuffle_is_permutation():
+    cfg = DataConfig(n_samples_log2=10, seq_len=8, vocab_size=64, seed=3)
+    b = epoch_bmmc(cfg, epoch=0)
+    seen = {b.apply(i) for i in range(1 << 10)}
+    assert len(seen) == 1 << 10
+    # different epochs -> different shuffles
+    b1 = epoch_bmmc(cfg, epoch=1)
+    assert b.rows != b1.rows or b.c != b1.c
+
+
+def test_loader_deterministic_and_resumable():
+    cfg = DataConfig(n_samples_log2=8, seq_len=16, vocab_size=64, seed=1)
+    l1 = ShardedLoader(cfg, batch_size=4)
+    batches = [next(l1) for _ in range(5)]
+    # restore from state after 3 batches reproduces batches 4,5 exactly
+    l2 = ShardedLoader(cfg, batch_size=4)
+    for _ in range(3):
+        next(l2)
+    state = l2.state()
+    l3 = ShardedLoader(cfg, batch_size=4)
+    l3.restore(state)
+    for want_i in (3, 4):
+        got = next(l3)
+        assert np.array_equal(got["tokens"], batches[want_i]["tokens"])
+
+
+def test_loader_shards_disjoint():
+    cfg = DataConfig(n_samples_log2=8, seq_len=4, vocab_size=64, seed=2)
+    a = ShardedLoader(cfg, batch_size=128, host_id=0, n_hosts=2)
+    b = ShardedLoader(cfg, batch_size=128, host_id=1, n_hosts=2)
+    ta, tb = next(a)["tokens"], next(b)["tokens"]
+    # shards read different samples (overwhelmingly likely to differ)
+    assert not np.array_equal(ta, tb)
+
+
+def test_checkpoint_roundtrip_and_integrity():
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"m": jnp.ones((5,)), "n": jnp.zeros((2, 2))}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, tree, extra_state={"loader": {"epoch": 1}})
+        assert ckpt.latest_step(d) == 7
+        restored, extra = ckpt.restore(d, 7, tree)
+        assert extra["loader"]["epoch"] == 1
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        # corrupt a leaf -> integrity failure
+        import numpy as _np
+        path = os.path.join(d, "step_00000007", "arrays.npz")
+        data = dict(_np.load(path))
+        data["w"] = data["w"] + 1
+        _np.savez(path, **data)
+        with pytest.raises(IOError):
+            ckpt.restore(d, 7, tree)
+
+
+def test_checkpoint_prunes_old():
+    tree = {"w": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, tree, keep_last=2)
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(steps) == 2 and ckpt.latest_step(d) == 5

@@ -1,0 +1,56 @@
+"""Sharding rules: divisibility guards, spec construction (1-device mesh
+semantics only — multi-device behaviour is exercised by the dry-run)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import batch_spec, dp_axes, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .axis_names and .shape are consulted."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_vocab_sharded_when_divisible():
+    s = spec_for(MESH, ("vocab", "embed"), (49152, 4608))
+    assert s == P("model", "data")
+
+
+def test_divisibility_guard_falls_back():
+    # 50280 % 16 != 0 -> vocab replicated; 36 heads % 16 != 0 -> replicated
+    s = spec_for(MESH, ("vocab", "embed"), (50280, 768))
+    assert s[0] is None
+    s2 = spec_for(MESH, ("embed", "heads", "head_dim"), (4608, 36, 128))
+    assert s2 == P("data", None, None)
+
+
+def test_each_axis_used_once():
+    # experts takes model; mlp would also want model -> replicated
+    s = spec_for(MESH, ("experts", "embed", "mlp"), (384, 7168, 2048))
+    assert s == P("model", "data", None)
+
+
+def test_pod_composes_with_data():
+    s = spec_for(MESH3, ("embed", "mlp"), (8192, 28672))
+    assert s == P(("pod", "data"), "model")
+    assert dp_axes(MESH3) == ("pod", "data")
+
+
+def test_seq_kv_cache_rule():
+    s = spec_for(MESH, ("batch", "seq_kv", "kv_heads", None),
+                 (128, 32768, 8, 128))
+    # kv=8 cannot take model (16); sequence carries it (SP)
+    assert s == P("data", "model", None, None)
+
+
+def test_batch_spec_guard():
+    assert batch_spec(MESH, 256, 2) == P("data", None)
+    assert batch_spec(MESH, 1, 2) == P(None, None)  # long_500k batch=1
+    assert batch_spec(MESH3, 256, 3) == P(("pod", "data"), None, None)

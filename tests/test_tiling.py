@@ -1,0 +1,86 @@
+"""TilePlan invariants (paper §4.1): coverage, coalescing, conflict-freedom."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bmmc import Bmmc
+from repro.core.tiling import naive_write_runs, plan_bmmc, plan_tiled
+
+
+@given(st.integers(6, 12), st.integers(0, 10**6), st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_tile_row_coverage(n, seed, t):
+    """Every input row is read exactly once; every output row written once."""
+    if 2 * t > n:
+        return
+    b = Bmmc.random_bpc(n, random.Random(seed))
+    p = plan_tiled(b, t)
+    assert p is not None
+    nrows = 1 << (n - t)
+    assert sorted(p.in_rows.reshape(-1).tolist()) == list(range(nrows))
+    assert sorted(p.out_rows.reshape(-1).tolist()) == list(range(nrows))
+
+
+@given(st.integers(6, 12), st.integers(0, 10**6), st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_src0_is_tile_permutation(n, seed, t):
+    if 2 * t > n:
+        return
+    b = Bmmc.random_bpc(n, random.Random(seed))
+    p = plan_tiled(b, t)
+    flat = p.src0.reshape(-1)
+    assert sorted(flat.tolist()) == list(range(flat.size))
+
+
+@given(st.integers(6, 12), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_bpc_has_zero_xor(n, seed):
+    """For BPCs the per-tile lane XOR vanishes (block bits map high)."""
+    b = Bmmc.random_bpc(n, random.Random(seed))
+    p = plan_tiled(b, min(3, n // 2))
+    assert p is not None
+    assert (p.xor_low == 0).all()
+
+
+def test_simulated_kernel_matches_reference():
+    """Full numpy simulation of the tiled pipeline == direct permutation."""
+    rng = random.Random(9)
+    for n, t in [(10, 3), (12, 4)]:
+        for b in (Bmmc.bit_reverse(n), Bmmc.random(n, rng)):
+            plans = plan_bmmc(b, t)
+            x = np.arange(1 << n)
+            cur = x
+            for p in plans:
+                rl = p.row_len
+                xv = cur.reshape(-1, rl)
+                out = np.empty_like(xv)
+                for g in range(p.n_tiles):
+                    tile = xv[p.in_rows[g]].reshape(-1)
+                    j = np.arange(tile.size)
+                    src = p.src0.reshape(-1)[(j & ~(rl - 1)) | ((j ^ p.xor_low[g]) & (rl - 1))]
+                    out[p.out_rows[g]] = tile[src].reshape(-1, rl)
+                cur = out.reshape(-1)
+            want = np.empty_like(x)
+            for i in range(1 << n):
+                want[b.apply(i)] = x[i]
+            assert np.array_equal(cur, want)
+
+
+def test_transaction_model_tiled_vs_naive():
+    """The tiled pipeline is fully coalesced; the naive kernel is not.
+
+    This is the offline counterpart of the paper's Fig. 9: bit-reversal's
+    naive kernel touches ~seg_elems segments per warp (worst case), the
+    tiled kernel exactly 1 contiguous run per row.
+    """
+    n, t = 16, 4
+    b = Bmmc.bit_reverse(n)
+    runs = naive_write_runs(b, seg_elems=1 << t)
+    assert runs == float(1 << t)          # worst case: fully uncoalesced
+    p = plan_tiled(b, t)
+    in_bytes, out_bytes = p.bytes_per_descriptor(4)
+    assert in_bytes >= (1 << t) * 4 and out_bytes >= (1 << t) * 4
+    # identity: naive already coalesced
+    assert naive_write_runs(Bmmc.identity(n), seg_elems=1 << t) == 1.0
