@@ -15,7 +15,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig9,fig10,transpose,sort,khc,roofline")
+                    help="comma-separated subset: "
+                         "fig9,fig10,transpose,sort,khc,roofline,combinators")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -39,6 +40,9 @@ def main() -> None:
     if want is None or "roofline" in want:
         from . import roofline
         suites.append(roofline.bench_roofline)
+    if want is None or "combinators" in want:
+        from . import combinator_fusion
+        suites.append(combinator_fusion.rows)
     for rows_fn in suites:
         for name, us, derived in rows_fn():
             print(f"{name},{us:.2f},{derived}")

@@ -1,9 +1,9 @@
-"""Paper §7: the parm sorting network, raw vs fused BMMC stage counts.
+"""Paper §7: compiled-sort wall time on CPU (pure-jnp engine).
 
-The compile-time rewrite ``bmmc B . bmmc A -> bmmc (BA)`` collapses the
-permutation pipeline; each residual BMMC costs <= 2 coalesced passes
-(§5.2), so the table reports the end-to-end pass count of the whole sort.
-Also times the compiled sort (pure-jnp engine) on CPU for 2^14 elements.
+Stage-count / fusion tables for the sort (and FFT) live in
+``benchmarks/combinator_fusion.py`` — this module only times the fused
+network end-to-end for 2^14 elements, as a sanity row that the whole
+compiled program executes.
 """
 from __future__ import annotations
 
@@ -12,20 +12,10 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sort import (compile_sort, fuse, num_perm_stages, run_stages)
-from repro.kernels.ops import bmmc_plans
+from repro.core.sort import compile_sort, fuse, run_stages
 
 
 def rows():
-    out = []
-    for n in (4, 8, 12):
-        raw = compile_sort(n)
-        fz = fuse(raw)
-        passes = sum(len(bmmc_plans(s.bmmc, min(3, n // 2)))
-                     for s in fz if hasattr(s, "bmmc"))
-        out.append((f"sort/2^{n}/stages", 0.0,
-                    f"raw={num_perm_stages(raw)};fused={num_perm_stages(fz)};"
-                    f"tiled_passes={passes}"))
     n = 14
     xs = jnp.asarray(np.random.default_rng(0).integers(0, 1 << 30, 1 << n,
                                                        dtype=np.int32))
@@ -36,8 +26,7 @@ def rows():
     t0 = time.perf_counter()
     run()
     dt = time.perf_counter() - t0
-    out.append((f"sort/2^{n}/cpu-jnp", dt * 1e6, "sorted=True"))
-    return out
+    return [(f"sort/2^{n}/cpu-jnp", dt * 1e6, "sorted=True")]
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ import numpy as np
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
-    leaves, treedef = jax.tree.flatten_with_path(tree)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     for path, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
@@ -102,7 +102,7 @@ def restore(dirpath: str, step: int, template: Any, *,
             if digest != meta["sha256"]:
                 raise IOError(f"integrity failure for leaf {key!r}")
         out_flat[key] = arr
-    leaves, treedef = jax.tree.flatten_with_path(template)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     ordered = []
     for path, _ in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

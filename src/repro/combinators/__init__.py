@@ -1,0 +1,34 @@
+"""Array combinators over BMMC index permutations (paper §7, generalized).
+
+A lazy expression IR (:mod:`.ir`), a vocabulary of named combinators
+(:mod:`.vocab`), a fusing optimizer implementing the §7.2 rewrite algebra
+(:mod:`.optimize`), and a multi-engine executor with a compiled-plan
+cache (:mod:`.execute`). Workloads: the balanced-periodic sorting network
+(:mod:`.sort`) and a radix-2 FFT (:mod:`.fft`).
+
+Quick tour::
+
+    from repro.combinators import vocab as V, compile_expr
+
+    e = V.riffle(10) >> V.bit_reverse(10) >> V.rev(10)
+    f = compile_expr(e, engine="pallas")   # one fused tiled pass
+    y = f(x)
+"""
+from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
+                 Seq, Two, seq)
+from .optimize import fuse, lower, num_perm_stages, optimize, program_cost
+from .execute import (CompiledExpr, compile_expr, engines, get_engine,
+                      register_engine, run_program)
+from . import vocab
+from .sort import compiled_sort, sort_expr
+# NB: the fft *function* stays in .fft to avoid shadowing the submodule
+# attribute (``repro.combinators.fft`` must remain the module).
+from .fft import compiled_fft, fft_expr
+
+__all__ = [
+    "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
+    "Perm", "Seq", "Two", "seq", "fuse", "lower", "num_perm_stages", "optimize",
+    "program_cost", "CompiledExpr", "compile_expr", "engines", "get_engine",
+    "register_engine", "run_program", "vocab", "compiled_sort", "sort_expr",
+    "compiled_fft", "fft_expr",
+]

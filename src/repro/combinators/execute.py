@@ -1,0 +1,193 @@
+"""Multi-engine executor with a compiled-plan cache.
+
+Engines map a ``Perm`` stage to an actual array permutation:
+
+* ``"ref"``    — the pure-jnp gather oracle (:mod:`repro.kernels.ref`).
+* ``"pallas"`` — the tiled Pallas pipeline (:mod:`repro.kernels`), with a
+  twist: the per-stage kernel executable is cached by *tile geometry*
+  (:func:`repro.kernels.bmmc_permute.plan_geometry`), and the per-stage
+  index tables are passed as runtime arguments. A fused program with many
+  distinct BMMCs but few distinct geometries therefore pays the pallas
+  trace/lower cost only once per geometry, not once per stage.
+
+Any callable ``(x, bmmc) -> x`` is also accepted wherever an engine name
+is, so tests can inject instrumented engines.
+
+``compile_expr(expr)`` is the user entry point: lowering + fusion happen
+once per ``(expr, n)``; kernel plans once per ``(bmmc, t)``; kernel
+executables once per geometry. The returned function is jax-traceable
+(it can be wrapped in ``jax.jit``), and cheap to call as-is.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bmmc import Bmmc
+from ..kernels import ref as _ref
+from ..kernels.bmmc_permute import plan_geometry, tiled_permute_tables
+from .ir import Bfly, CmpHalves, Expr, Map, Perm
+from .optimize import Program, lower, fuse
+
+EngineFn = Callable[[jax.Array, Bmmc], jax.Array]
+
+_ENGINES: Dict[str, EngineFn] = {}
+
+
+def register_engine(name: str, fn: EngineFn) -> None:
+    _ENGINES[name] = fn
+
+
+def get_engine(engine: Union[str, EngineFn, None]) -> EngineFn:
+    if engine is None:
+        return _ENGINES["ref"]
+    if callable(engine):
+        return engine
+    try:
+        return _ENGINES[engine]
+    except KeyError:
+        raise KeyError(f"unknown engine {engine!r}; registered engines: "
+                       f"{sorted(_ENGINES)}") from None
+
+
+def engines() -> tuple:
+    return tuple(sorted(_ENGINES))
+
+
+# ---------------------------------------------------------------------------
+# The "pallas" engine: geometry-cached kernel executables.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _geom_executable(geometry: tuple, interpret: bool):
+    """One jitted tiled-pass executable per tile geometry. Index tables are
+    arguments, so every stage sharing this geometry reuses the trace."""
+    return jax.jit(functools.partial(
+        tiled_permute_tables, geometry=geometry, interpret=interpret))
+
+
+def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
+                   interpret: bool = True) -> jax.Array:
+    from ..kernels import ops
+
+    if bmmc.is_identity_perm():
+        return x
+    d = x.shape[1] if x.ndim == 2 else 1
+    teff = ops.choose_tile(bmmc.n, x.dtype.itemsize, d, t)
+    if teff is None:  # too small to tile; whole array fits anywhere
+        return _ref.bmmc_ref(x, bmmc)
+    for plan in ops.bmmc_plans(bmmc, teff):
+        run = _geom_executable(plan_geometry(plan), interpret)
+        x = run(x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0)
+    return x
+
+
+register_engine("ref", _ref.bmmc_ref)
+register_engine("pallas", _pallas_engine)
+
+
+# ---------------------------------------------------------------------------
+# Program execution
+# ---------------------------------------------------------------------------
+
+def _apply_bfly(x: jax.Array, twiddles: tuple) -> jax.Array:
+    """(lo, hi) -> (lo + w·hi, lo - w·hi). Complex arrays, or float arrays
+    with a trailing dim of 2 holding (re, im) channels."""
+    h = x.shape[0] // 2
+    lo, hi = x[:h], x[h:]
+    if jnp.iscomplexobj(x):
+        w = jnp.asarray(np.asarray(twiddles, dtype=np.complex64))
+        if x.ndim > 1:
+            w = w.reshape((h,) + (1,) * (x.ndim - 1))
+        t = w * hi
+        return jnp.concatenate([lo + t, lo - t], axis=0)
+    if x.ndim != 2 or x.shape[1] != 2:
+        raise ValueError("real-typed Bfly input must have shape (2^n, 2)")
+    wr = jnp.asarray(np.asarray([w.real for w in twiddles], dtype=x.dtype))
+    wi = jnp.asarray(np.asarray([w.imag for w in twiddles], dtype=x.dtype))
+    tre = wr * hi[:, 0] - wi * hi[:, 1]
+    tim = wr * hi[:, 1] + wi * hi[:, 0]
+    t = jnp.stack([tre, tim], axis=1)
+    return jnp.concatenate([lo + t, lo - t], axis=0)
+
+
+def run_program(program: Sequence[Expr], x: jax.Array,
+                engine: Union[str, EngineFn, None] = None) -> jax.Array:
+    """Execute a lowered (primitive-only) stage program."""
+    engine_fn = get_engine(engine)
+    for s in program:
+        if isinstance(s, Perm):
+            x = engine_fn(x, s.bmmc)
+        elif isinstance(s, CmpHalves):
+            h = x.shape[0] // 2
+            lo, hi = x[:h], x[h:]
+            x = jnp.concatenate([jnp.minimum(lo, hi), jnp.maximum(lo, hi)],
+                                axis=0)
+        elif isinstance(s, Bfly):
+            x = _apply_bfly(x, s.twiddles)
+        elif isinstance(s, Map):
+            x = s.fn(x)
+        else:
+            raise TypeError(f"non-primitive stage {type(s).__name__}; "
+                            "lower() the expression first")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# compile_expr — the compiled-plan cache
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1024)
+def _lowered_cached(expr: Expr, n: int, optimized: bool) -> Program:
+    prog = lower(expr, n)
+    return fuse(prog) if optimized else prog
+
+
+class CompiledExpr:
+    """A callable compiled combinator expression.
+
+    Calling it executes the (fused) stage program through the chosen
+    engine. ``program(n)`` exposes the stage program for inspection;
+    ``cost(n, t)`` the modeled transaction report.
+    """
+
+    def __init__(self, expr: Expr, engine: Union[str, EngineFn],
+                 optimized: bool):
+        self.expr = expr
+        self.engine = engine
+        self.optimized = optimized
+
+    def program(self, n: int) -> Program:
+        return _lowered_cached(self.expr, n, self.optimized)
+
+    def cost(self, n: int, t: int, itemsize: int = 4) -> dict:
+        from .optimize import program_cost
+        return program_cost(self.program(n), t, itemsize)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        n = int(x.shape[0]).bit_length() - 1
+        if (1 << n) != x.shape[0]:
+            raise ValueError(f"array length {x.shape[0]} is not a power of 2")
+        return run_program(self.program(n), x, self.engine)
+
+
+_COMPILED: Dict[tuple, CompiledExpr] = {}
+
+
+def compile_expr(expr: Expr, *, engine: Union[str, EngineFn] = "pallas",
+                 optimize: bool = True) -> CompiledExpr:
+    """Compile ``expr`` to a jit-able function running minimal tiled passes.
+
+    Lowered/fused programs, kernel plans, and kernel executables are all
+    cached, so repeated calls (and repeated ``compile_expr`` of the same
+    expression) share everything expensive.
+    """
+    key = (expr, engine if isinstance(engine, str) else id(engine), optimize)
+    got = _COMPILED.get(key)
+    if got is None:
+        got = _COMPILED[key] = CompiledExpr(expr, engine, optimize)
+    return got

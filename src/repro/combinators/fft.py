@@ -1,0 +1,77 @@
+"""Radix-2 DIT FFT as a combinator expression (bit-reversal + butterflies).
+
+The classic iterative FFT on 2^n points is::
+
+    bit_reverse  >>  stage 0  >>  stage 1  >>  ...  >>  stage n-1
+
+where stage ``s`` applies, within each contiguous block of 2^(s+1)
+elements, the butterfly pairing ``j <-> j + 2^s`` with twiddle
+``exp(-2πi j / 2^(s+1))``. In the IR that is ``two``-lifted ``n-s-1``
+times over a full-width :func:`~repro.combinators.vocab.bfly` core —
+every reordering (the bit-reversal and the block-bit swaps each ``two``
+lift introduces) is a BMMC permutation, so the optimizer fuses them
+across stages: the fused program has exactly one ``Perm`` between
+butterflies instead of a growing conjugation chain.
+
+Complex data is carried either natively (``complex64`` arrays, "ref"
+engine) or as ``(2^n, 2)`` float arrays of (re, im) channels — the layout
+the tiled Pallas kernels take (a permutation moves both channels of an
+element together, exercising the kernels' trailing-dim path).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .execute import CompiledExpr, compile_expr
+from .ir import Expr
+from .vocab import bfly, bit_reverse, seq, two
+
+
+def _stage_core(s: int) -> Expr:
+    """Butterfly core on 2^(s+1) elements: pairs (j, j + 2^s)."""
+    m = 1 << (s + 1)
+    ws = [complex(math.cos(-2 * math.pi * j / m),
+                  math.sin(-2 * math.pi * j / m)) for j in range(m // 2)]
+    return bfly(ws)
+
+
+@functools.lru_cache(maxsize=None)
+def fft_expr(n: int) -> Expr:
+    """The full 2^n-point DIT FFT expression."""
+    stages = [bit_reverse(n)]
+    for s in range(n):
+        e = _stage_core(s)
+        for _ in range(n - s - 1):
+            e = two(e)
+        stages.append(e)
+    return seq(*stages)
+
+
+def compiled_fft(n: int, *, engine="ref", optimize: bool = True) -> CompiledExpr:
+    return compile_expr(fft_expr(n), engine=engine, optimize=optimize)
+
+
+def fft(x, *, engine="ref"):
+    """FFT of a complex jax array of 2^n points via the combinator program."""
+    n = int(np.log2(np.shape(x)[0]))
+    x = jnp.asarray(x, jnp.complex64)
+    return compiled_fft(n, engine=engine)(x)
+
+
+def fft_planar(x_ri, *, engine="pallas"):
+    """FFT on the planar (2^n, 2) float (re, im) layout — kernel-friendly."""
+    n = int(np.log2(np.shape(x_ri)[0]))
+    return compiled_fft(n, engine=engine)(x_ri)
+
+
+def to_planar(x) -> jnp.ndarray:
+    x = jnp.asarray(x, jnp.complex64)
+    return jnp.stack([x.real, x.imag], axis=-1).astype(jnp.float32)
+
+
+def from_planar(x_ri) -> jnp.ndarray:
+    return x_ri[..., 0] + 1j * x_ri[..., 1]

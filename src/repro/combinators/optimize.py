@@ -1,0 +1,137 @@
+"""Lowering and the §7.2 rewrite algebra for combinator expressions.
+
+``lower(expr, n)`` eliminates every structured node, producing a flat
+tuple of primitive stages (``Perm`` / ``CmpHalves`` / ``Bfly`` / ``Map``):
+
+* ``Seq``            — concatenation of the lowered parts.
+* ``Two(f)``         — lower ``f`` on 2^(n-1) and *lift* each stage:
+    - ``Perm(A)``    -> ``Perm(diag(A, 1))`` (block diagonal, top bit fixed),
+    - ``Map``        -> unchanged (elementwise),
+    - ``CmpHalves``  -> conjugated by the top-two-bit swap,
+    - ``Bfly(w)``    -> conjugated by the swap, twiddles tiled (``w ++ w``).
+* ``ParmE(mask, f)`` — paper §7.2: ``Perm(A_mask) ; lift(f) ; Perm(A_mask^-1)``
+  with ``A_mask = parm_matrix`` (Fig. 13), i.e. ``parm`` reduces to ``two``
+  conjugated by one BMMC on each side.
+* ``Ilv(f)``         — sugar for ``ParmE(1, f)``.
+
+``fuse(program)`` applies the rewrite algebra::
+
+    bmmc B ∘ bmmc A          ->  bmmc (B A)          (fusion)
+    bmmc A ∘ bmmc A^-1       ->  id                  (cancellation, via fusion)
+    id                       ->  (dropped)
+
+Fusion can only ever *merge or drop* ``Perm`` stages, so the optimized
+program never has more permutation stages — and therefore never more
+tiled kernel passes — than the raw lowering (tested property).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple
+
+from ..core.bmmc import Bmmc
+from ..core.parm import parm_matrix
+from .ir import (Bfly, CmpHalves, Expr, Id, Ilv, Map, ParmE, Perm, Seq, Two,
+                 PRIMITIVES)
+
+Program = Tuple[Expr, ...]  # primitives only
+
+
+def _lift(stages: Program, n: int) -> Program:
+    """Lift a program on 2^(n-1) arrays to act on both halves of 2^n."""
+    swap = Bmmc.from_perm([*range(n - 2), n - 1, n - 2]) if n >= 2 else None
+    out: List[Expr] = []
+    for s in stages:
+        if isinstance(s, Perm):
+            rows = tuple(s.bmmc.rows) + (1 << (n - 1),)
+            out.append(Perm(Bmmc(rows, s.bmmc.c)))
+        elif isinstance(s, Map):
+            out.append(s)
+        elif isinstance(s, CmpHalves):
+            out.extend([Perm(swap), CmpHalves(), Perm(swap)])
+        elif isinstance(s, Bfly):
+            out.extend([Perm(swap), Bfly(s.twiddles + s.twiddles), Perm(swap)])
+        else:  # pragma: no cover - lower() only emits primitives
+            raise TypeError(f"cannot lift {type(s).__name__}")
+    return tuple(out)
+
+
+def lower(expr: Expr, n: int) -> Program:
+    """Flatten ``expr`` (on arrays of 2^n) into primitive stages."""
+    if isinstance(expr, Id):
+        return ()
+    if isinstance(expr, Seq):
+        out: List[Expr] = []
+        for f in expr.fs:
+            out.extend(lower(f, n))
+        return tuple(out)
+    if isinstance(expr, Two):
+        if n < 1:
+            raise ValueError("Two needs n >= 1")
+        return _lift(lower(expr.f, n - 1), n)
+    if isinstance(expr, Ilv):
+        return lower(ParmE(1, expr.f), n)
+    if isinstance(expr, ParmE):
+        if not expr.mask < (1 << n):
+            raise ValueError(f"parm mask {expr.mask:#x} out of range for n={n}")
+        a = parm_matrix(n, expr.mask)
+        body = _lift(lower(expr.f, n - 1), n)
+        return (Perm(a),) + body + (Perm(a.inverse()),)
+    if isinstance(expr, Perm):
+        if expr.bmmc.n != n:
+            raise ValueError(f"Perm is on {expr.bmmc.n} bits, array has {n}")
+        return (expr,)
+    if isinstance(expr, Bfly):
+        if expr.size_bits() != n:
+            raise ValueError(f"Bfly is on {expr.size_bits()} bits, array has {n}")
+        return (expr,)
+    if isinstance(expr, PRIMITIVES):
+        return (expr,)
+    raise TypeError(f"unknown Expr node {type(expr).__name__}")
+
+
+def fuse(program: Sequence[Expr]) -> Program:
+    """Fuse adjacent ``Perm`` stages and drop identity permutations."""
+    out: List[Expr] = []
+    for s in program:
+        if isinstance(s, Perm) and out and isinstance(out[-1], Perm):
+            out[-1] = Perm(s.bmmc @ out[-1].bmmc)
+        else:
+            out.append(s)
+    return tuple(s for s in out
+                 if not (isinstance(s, Perm) and s.bmmc.is_identity_perm()))
+
+
+def optimize(expr: Expr, n: int) -> Program:
+    """Lower and fuse: the full offline pipeline."""
+    return fuse(lower(expr, n))
+
+
+def num_perm_stages(program: Iterable[Expr]) -> int:
+    return sum(isinstance(s, Perm) for s in program)
+
+
+def program_cost(program: Sequence[Expr], t: int, itemsize: int = 4) -> dict:
+    """Offline cost report: tiled passes + DMA descriptors (transaction model).
+
+    ``t`` is the tile parameter of the executing kernel; each ``Perm``
+    contributes 1 pass if tiled, else 2 (paper §5.2). Descriptor counts
+    come from :func:`repro.kernels.ops.modeled_transactions`.
+    """
+    from ..kernels.ops import modeled_transactions
+
+    perms = [s for s in program if isinstance(s, Perm)]
+    passes = 0
+    descriptors = 0
+    bytes_moved = 0
+    for s in perms:
+        tx = modeled_transactions(s.bmmc, t, itemsize)
+        passes += tx["passes"]
+        descriptors += tx["descriptors"]
+        bytes_moved += tx["bytes_moved"]
+    return {
+        "stages": len(tuple(program)),
+        "perm_stages": len(perms),
+        "tiled_passes": passes,
+        "descriptors": descriptors,
+        "bytes_moved": bytes_moved,
+    }

@@ -259,8 +259,10 @@ def binary_mesh(s: int):
     """Mesh of 2^s devices as s binary axes sb{s-1}..sb0 (msb first)."""
     import jax
     names = tuple(f"sb{m}" for m in reversed(range(s)))
-    return jax.make_mesh((2,) * s, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * s)
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):  # absent before jax 0.5
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * s
+    return jax.make_mesh((2,) * s, names, **kw)
 
 
 def run_plan(x, plan: List[Round], s: int, mesh=None):

@@ -1,4 +1,4 @@
-"""Sorting networks via ``parm`` (paper §7.1) and their BMMC compilation.
+"""Sorting networks via ``parm`` (paper §7.1) — combinator-IR backed.
 
 The paper's example: a merge sort whose merger is the balanced periodic
 merger [Dowd et al.]::
@@ -15,23 +15,32 @@ merger [Dowd et al.]::
 Two implementations are provided:
 
 * ``sort_rec`` — direct recursion with ``parm`` (reference semantics).
-* ``compile_sort`` — compiles the whole network into a *stage program*:
-  an alternating sequence ``Perm(BMMC) / CmpHalves`` where adjacent BMMC
-  permutations are **fused** (``bmmc B ∘ bmmc A = bmmc (B A)``, the rewrite
-  algebra of §7.2), so the executed program is exactly one fused BMMC
-  permutation between consecutive compare-exchange sweeps.
+* ``compile_sort`` — the network as a :mod:`repro.combinators` stage
+  program: ``fuse`` applies the §7.2 rewrite (``bmmc B ∘ bmmc A =
+  bmmc (BA)``), leaving exactly one fused BMMC permutation between
+  consecutive compare-exchange sweeps.
+
+This module is a thin compatibility facade: the expression language,
+optimizer, and executor live in :mod:`repro.combinators` (which see).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, List, Union
+from typing import Callable, List, Sequence, Union
 
-import jax.numpy as jnp
 import numpy as np
 
-from . import f2
-from .bmmc import Bmmc
-from .parm import parm_matrix, parm_ref
+from ..combinators.execute import run_program
+from ..combinators.ir import CmpHalves, Expr, Perm
+from ..combinators.optimize import fuse as _fuse_program
+from ..combinators.optimize import lower, num_perm_stages as _num_perm
+from ..combinators.sort import merge_expr, sort_expr, vcolumn_expr
+from .parm import parm_ref
+
+Stage = Expr  # a lowered program is a sequence of primitive Expr stages
+
+__all__ = ["Perm", "CmpHalves", "Stage", "sort_rec", "merge_rec",
+           "vcolumn_rec", "compile_sort", "compile_merge", "compile_vcolumn",
+           "fuse", "run_stages", "sort_compiled", "num_perm_stages"]
 
 
 # ---------------------------------------------------------------------------
@@ -67,97 +76,40 @@ def sort_rec(n: int, xs):
 
 
 # ---------------------------------------------------------------------------
-# Stage-program compilation
+# Stage-program compilation (combinator IR lowering)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class Perm:
-    bmmc: Bmmc
-
-
-@dataclasses.dataclass(frozen=True)
-class CmpHalves:
-    """out[:h] = min(a[:h], a[h:]); out[h:] = max — one full-width sweep."""
-
-
-Stage = Union[Perm, CmpHalves]
-
-
-def _lift(stages: List[Stage], n: int) -> List[Stage]:
-    """Lift a program on 2^(n-1) arrays to act on both halves of a 2^n array.
-
-    * ``Perm(A')`` lifts to the block-diagonal BMMC diag(A', 1).
-    * ``CmpHalves`` on halves compares i <-> i + 2^(n-2) within each half;
-      conjugating with the (n-2, n-1) bit swap turns it into a full-width
-      ``CmpHalves`` (the swaps fuse with neighbouring perms).
-    """
-    out: List[Stage] = []
-    swap = Bmmc.from_perm([*range(n - 2), n - 1, n - 2])  # exchange top two bits
-    for s in stages:
-        if isinstance(s, Perm):
-            rows = tuple(s.bmmc.rows) + (1 << (n - 1),)
-            out.append(Perm(Bmmc(rows, s.bmmc.c)))
-        else:
-            out.extend([Perm(swap), CmpHalves(), Perm(swap)])
-    return out
-
-
-def _parm_net(n: int, mask: int, sub: List[Stage]) -> List[Stage]:
-    a = parm_matrix(n, mask)
-    return [Perm(a)] + _lift(sub, n) + [Perm(a.inverse())]
-
-
 def compile_vcolumn(n: int) -> List[Stage]:
-    if n == 0:
-        return []
-    if n == 1:
-        return [CmpHalves()]
-    return _parm_net(n, 3, compile_vcolumn(n - 1))
+    return list(lower(vcolumn_expr(n), n))
 
 
 def compile_merge(n: int) -> List[Stage]:
-    if n == 0:
-        return []
-    return compile_vcolumn(n) + _parm_net(n, 1 << (n - 1), compile_merge(n - 1))
+    return list(lower(merge_expr(n), n))
 
 
 def compile_sort(n: int) -> List[Stage]:
-    if n == 0:
-        return []
-    return _parm_net(n, 1, compile_sort(n - 1)) + compile_merge(n)
+    return list(lower(sort_expr(n), n))
 
 
-def fuse(stages: List[Stage]) -> List[Stage]:
+def fuse(stages: Sequence[Stage]) -> List[Stage]:
     """Fuse adjacent Perm stages and drop identities (the §7.2 rewrite)."""
-    out: List[Stage] = []
-    for s in stages:
-        if isinstance(s, Perm) and out and isinstance(out[-1], Perm):
-            out[-1] = Perm(s.bmmc @ out[-1].bmmc)
-        else:
-            out.append(s)
-    return [s for s in out
-            if not (isinstance(s, Perm) and s.bmmc.is_identity_perm())]
+    return list(_fuse_program(tuple(stages)))
 
 
-def run_stages(stages: List[Stage], xs, *, engine: Callable = None):
-    """Execute a stage program on a jax array of size 2^n."""
-    if engine is None:
-        from ..kernels import ref as _ref
-        engine = _ref.bmmc_ref
-    for s in stages:
-        if isinstance(s, Perm):
-            xs = engine(xs, s.bmmc)
-        else:
-            h = xs.shape[0] // 2
-            lo, hi = xs[:h], xs[h:]
-            xs = jnp.concatenate([jnp.minimum(lo, hi), jnp.maximum(lo, hi)])
-    return xs
+def run_stages(stages: Sequence[Stage], xs, *,
+               engine: Union[str, Callable, None] = None):
+    """Execute a stage program on a jax array of size 2^n.
+
+    ``engine``: an engine name from :mod:`repro.combinators.execute`
+    ("ref"/"pallas"), a callable ``(x, bmmc) -> x``, or None for "ref".
+    """
+    return run_program(tuple(stages), xs, engine)
 
 
-def sort_compiled(xs, *, engine: Callable = None):
+def sort_compiled(xs, *, engine: Union[str, Callable, None] = None):
     n = int(np.log2(xs.shape[0]))
     return run_stages(fuse(compile_sort(n)), xs, engine=engine)
 
 
-def num_perm_stages(stages: List[Stage]) -> int:
-    return sum(isinstance(s, Perm) for s in stages)
+def num_perm_stages(stages: Sequence[Stage]) -> int:
+    return _num_perm(stages)

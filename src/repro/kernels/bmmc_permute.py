@@ -20,7 +20,6 @@ Design (see DESIGN.md §2 for the GPU->TPU mapping):
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +28,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.tiling import TilePlan
+
+# API compat: jax >= 0.5 renamed TPUMemorySpace -> MemorySpace (gaining HBM)
+# and TPUCompilerParams -> CompilerParams. Support both spellings.
+_MS = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+_HBM = getattr(_MS, "HBM", None) or _MS.ANY
+_VMEM = _MS.VMEM
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
 
 
 def _tile_kernel(in_rows, out_rows, xor_low,   # scalar prefetch (SMEM)
@@ -83,33 +90,48 @@ def _tile_kernel(in_rows, out_rows, xor_low,   # scalar prefetch (SMEM)
         cp.wait()
 
 
-def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True) -> jax.Array:
-    """Apply one tiled-BMMC pass. ``x``: (2^n,) or (2^n, d)."""
-    n = plan.n
-    rpt, row_len = plan.rows_per_tile, plan.row_len
+def plan_geometry(plan: TilePlan) -> tuple:
+    """The hashable tile geometry of a plan — everything that shapes the
+    kernel *except* the per-stage index tables. Two plans with equal
+    geometry can share one compiled kernel executable (tables are runtime
+    arguments), which is what :mod:`repro.combinators.execute` exploits to
+    amortize trace/compile cost across the stages of a fused program."""
+    return (plan.n, plan.t, plan.rows_per_tile, plan.in_run, plan.out_run,
+            plan.n_tiles)
+
+
+def tiled_permute_tables(x: jax.Array, in_rows, out_rows, xor_low, src0, *,
+                         geometry: tuple, interpret: bool = True) -> jax.Array:
+    """One tiled-BMMC pass with the index tables as (traced) arguments.
+
+    ``geometry`` is :func:`plan_geometry` output; tables may be jax arrays,
+    so this function traces once per geometry under ``jax.jit``.
+    """
+    n, t, rpt, in_run, out_run, n_tiles = geometry
+    row_len = 1 << t
     has_tail = x.ndim == 2
     d = x.shape[1] if has_tail else 1
-    row_view = (1 << (n - plan.t), row_len, d) if has_tail else (1 << (n - plan.t), row_len)
+    row_view = (1 << (n - t), row_len, d) if has_tail else (1 << (n - t), row_len)
     xv = x.reshape(row_view)
     tile_shape = (rpt, row_len, d) if has_tail else (rpt, row_len)
 
     kern = functools.partial(
         _tile_kernel, rpt=rpt, row_len=row_len,
-        in_run=plan.in_run, out_run=plan.out_run, has_tail=has_tail,
+        in_run=in_run, out_run=out_run, has_tail=has_tail,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(plan.n_tiles,),
+        grid=(n_tiles,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),   # x rows
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.VMEM),  # src0
+            pl.BlockSpec(memory_space=_HBM),   # x rows
+            pl.BlockSpec(memory_space=_VMEM),  # src0
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),
+        out_specs=pl.BlockSpec(memory_space=_HBM),
         scratch_shapes=[
             pltpu.VMEM(tile_shape, x.dtype),                    # in tile
             pltpu.VMEM(tile_shape, x.dtype),                    # out tile
-            pltpu.SemaphoreType.DMA((rpt // plan.in_run,)),
-            pltpu.SemaphoreType.DMA((rpt // plan.out_run,)),
+            pltpu.SemaphoreType.DMA((rpt // in_run,)),
+            pltpu.SemaphoreType.DMA((rpt // out_run,)),
         ],
     )
     out = pl.pallas_call(
@@ -117,14 +139,22 @@ def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True) -> ja
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(row_view, x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
     )(
-        jnp.asarray(plan.in_rows), jnp.asarray(plan.out_rows),
-        jnp.asarray(plan.xor_low), xv, jnp.asarray(plan.src0),
+        jnp.asarray(in_rows), jnp.asarray(out_rows),
+        jnp.asarray(xor_low), xv, jnp.asarray(src0),
     )
     return out.reshape(x.shape)
+
+
+def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True) -> jax.Array:
+    """Apply one tiled-BMMC pass. ``x``: (2^n,) or (2^n, d)."""
+    return tiled_permute_tables(
+        x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0,
+        geometry=plan_geometry(plan), interpret=interpret,
+    )
 
 
 # ---------------------------------------------------------------------------

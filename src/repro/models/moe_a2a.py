@@ -32,7 +32,10 @@ def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     """Per-device body. x: (T_local, E). Expert weights arrive model-sharded
     on dim 0 and FSDP-sharded over dp on the embed dim; gathered here."""
     t, e = x.shape
-    n_peers = jax.lax.axis_size(model_axis)
+    if hasattr(jax.lax, "axis_size"):
+        n_peers = jax.lax.axis_size(model_axis)
+    else:  # jax < 0.5: psum of a python literal folds to the static size
+        n_peers = int(jax.lax.psum(1, model_axis))
     xpp = n_experts // n_peers                     # experts per peer
 
     def gather_dp(w, axis):

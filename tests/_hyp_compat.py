@@ -1,0 +1,88 @@
+"""Fallback shim for ``hypothesis`` so tier-1 collection never breaks.
+
+When the real ``hypothesis`` package is installed it is re-exported
+unchanged. Otherwise, minimal seeded-random equivalents of ``given`` /
+``settings`` / ``strategies`` are provided: each ``@given`` test runs
+``max_examples`` deterministic examples drawn from ``random.Random``
+seeded by the test name, so failures are reproducible (no shrinking).
+
+Only the strategy surface used by this repo's tests is implemented:
+``integers``, ``booleans``, ``lists``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 30
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                k = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(k)]
+
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        """Records options for ``given``; a no-op on already-wrapped tests."""
+
+        def deco(fn):
+            fn._hyp_settings = {"max_examples": max_examples}
+            return fn
+
+        return deco
+
+    def given(*strats, **kw_strats):
+        def deco(fn):
+            opts = getattr(fn, "_hyp_settings", {})
+            n_examples = opts.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            # NB: no functools.wraps — pytest must see a zero-arg signature,
+            # not the original one (it would look for fixtures n, seed, ...).
+            def runner():
+                rng = random.Random(seed)
+                for i in range(n_examples):
+                    drawn = [s.sample(rng) for s in strats]
+                    kw = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    try:
+                        fn(*drawn, **kw)
+                    except Exception as e:  # annotate the failing example
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on example {i}: "
+                            f"args={drawn!r} kwargs={kw!r}"
+                        ) from e
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

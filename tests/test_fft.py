@@ -1,0 +1,67 @@
+"""Radix-2 FFT workload on the combinator IR, vs jnp.fft / np.fft."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.combinators import fuse, lower, num_perm_stages
+from repro.combinators.fft import (compiled_fft, fft, fft_expr, from_planar,
+                                   to_planar)
+
+
+def _rand_complex(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(1 << n)
+            + 1j * rng.standard_normal(1 << n)).astype(np.complex64)
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 3, 5, 8, 10])
+def test_fft_matches_jnp_fft(n):
+    x = _rand_complex(n, seed=n)
+    got = np.asarray(fft(jnp.asarray(x)))
+    want = np.asarray(jnp.fft.fft(jnp.asarray(x)))
+    scale = max(1.0, np.abs(want).max())
+    assert np.abs(got - want).max() / scale < 1e-4
+
+
+def test_fft_planar_layout_roundtrip():
+    n = 6
+    x = _rand_complex(n, seed=1)
+    xp = to_planar(jnp.asarray(x))
+    assert xp.shape == (1 << n, 2) and xp.dtype == jnp.float32
+    back = np.asarray(from_planar(xp))
+    assert np.allclose(back, x, atol=1e-6)
+
+
+def test_fft_fusion_strictly_reduces_perm_stages():
+    n = 9
+    raw = lower(fft_expr(n), n)
+    fz = fuse(raw)
+    assert num_perm_stages(fz) < num_perm_stages(raw)
+    # n butterflies survive; at most one Perm between consecutive ones
+    from repro.combinators.ir import Bfly
+    assert sum(isinstance(s, Bfly) for s in fz) == n
+
+
+@pytest.mark.slow
+def test_fft_through_pallas_engine():
+    """ISSUE 1 acceptance: FFT whose reorderings run as tiled Pallas
+    kernels (planar (re, im) layout) matches the reference to 1e-4."""
+    n = 10
+    x = _rand_complex(n, seed=3)
+    f = compiled_fft(n, engine="pallas")
+    got = np.asarray(from_planar(f(to_planar(jnp.asarray(x)))))
+    want = np.fft.fft(x)
+    assert np.abs(got - want).max() / np.abs(want).max() < 1e-4
+
+
+def test_fft_linearity_and_impulse():
+    n = 5
+    imp = np.zeros(1 << n, np.complex64)
+    imp[0] = 1.0
+    got = np.asarray(fft(jnp.asarray(imp)))
+    assert np.allclose(got, np.ones(1 << n), atol=1e-5)  # delta -> flat
+    x, y = _rand_complex(n, 4), _rand_complex(n, 5)
+    fxy = np.asarray(fft(jnp.asarray(x + y)))
+    fx = np.asarray(fft(jnp.asarray(x)))
+    fy = np.asarray(fft(jnp.asarray(y)))
+    assert np.abs(fxy - (fx + fy)).max() < 1e-4 * max(1.0, np.abs(fxy).max())

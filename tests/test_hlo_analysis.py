@@ -7,6 +7,8 @@ import json
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -15,8 +17,9 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze_hlo
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+      if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((4, 2), ("data", "model"), **kw)
 M, N, K, T = 256, 128, 64, 5
 
 def f(x, w):
@@ -36,6 +39,7 @@ print(json.dumps(r))
 """
 
 
+@pytest.mark.slow
 def test_analyzer_hand_count():
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
