@@ -1,0 +1,77 @@
+"""Autodiff overhead: fwd vs fwd+bwd µs/call for fused combinator programs.
+
+The backward pass of a permutation program is the offline-inverted
+program (DESIGN.md §9), so fwd+bwd should cost ~2x fwd in permutation
+passes — not the gather-transpose blowup a generic autodiff would pay.
+This table reports wall-clock per call on both engines (interpret-mode
+pallas; see §7.4 on clocks) plus the modeled pass counts of the forward
+and VJP programs, batched and unbatched.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.combinators import compile_expr, inverse_program, vocab as V
+from repro.combinators.optimize import num_perm_stages
+from repro.combinators.sort import sort_expr
+from repro.core.bmmc import Bmmc
+
+
+def _timed(fn, *args, reps: int = 5):
+    jax.block_until_ready(fn(*args))  # warm (trace + compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _programs(n):
+    import random
+    rng = random.Random(0)
+    return (
+        ("permchain", V.bit_reverse(n) >> V.perm(Bmmc.random(n, rng))
+         >> V.riffle(n)),
+        ("sort", sort_expr(n)),
+    )
+
+
+def rows():
+    out = []
+    n = 8
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1 << n,)).astype(np.float32))
+    xb = jnp.tile(x, (8, 1))
+    for name, e in _programs(n):
+        for engine in ("ref", "pallas"):
+            f = compile_expr(e, engine=engine)
+            prog = f.program(n)
+            perms = num_perm_stages(prog)
+            try:
+                vjp_perms = num_perm_stages(inverse_program(prog))
+            except TypeError:  # non-perm stages: VJP handled by jax autodiff
+                vjp_perms = perms
+            fwd = jax.jit(lambda x: jnp.sum(f(x) ** 2))
+            bwd = jax.jit(jax.grad(lambda x: jnp.sum(f(x) ** 2)))
+            fwd_b = jax.jit(lambda x: jnp.sum(f(x, batched=True) ** 2))
+            bwd_b = jax.jit(jax.grad(
+                lambda x: jnp.sum(f(x, batched=True) ** 2)))
+            us_f = _timed(fwd, x)
+            us_fb = _timed(bwd, x)
+            us_bf = _timed(fwd_b, xb)
+            us_bfb = _timed(bwd_b, xb)
+            out.append((
+                f"autodiff/{name}/2^{n}/{engine}", us_fb,
+                f"fwd_us={us_f:.1f};fwdbwd_us={us_fb:.1f};"
+                f"batched8_fwd_us={us_bf:.1f};batched8_fwdbwd_us={us_bfb:.1f};"
+                f"fwd_perm_stages={perms};vjp_perm_stages={vjp_perms}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(v) for v in r))

@@ -16,9 +16,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig9,fig10,transpose,sort,khc,roofline,combinators")
+                         "fig9,fig10,transpose,sort,khc,roofline,"
+                         "combinators,autodiff")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sanity subset (combinators + autodiff; "
+                         "pairs with `pytest -m tier1` as the quick "
+                         "tier-1 smoke entry point)")
     args = ap.parse_args()
+    if args.smoke and args.only:
+        ap.error("--smoke and --only are mutually exclusive")
     want = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        want = {"combinators", "autodiff"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -43,6 +52,9 @@ def main() -> None:
     if want is None or "combinators" in want:
         from . import combinator_fusion
         suites.append(combinator_fusion.rows)
+    if want is None or "autodiff" in want:
+        from . import autodiff_overhead
+        suites.append(autodiff_overhead.rows)
     for rows_fn in suites:
         for name, us, derived in rows_fn():
             print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,69 @@
+"""Gradients and batches through BMMC permute layers (DESIGN.md §9).
+
+A compiled combinator program is a first-class JAX citizen: ``jax.grad``
+flows through the tiled pallas kernels via the offline-inverted program
+(no gather transpose), and a leading batch dim shares one tile plan.
+
+Run: PYTHONPATH=src python examples/grad_permute.py
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.combinators import (compile_expr, geom_cache_info,
+                               inverse_program, vocab as V)
+from repro.core.bmmc import Bmmc
+from repro.models.permute import PermuteLayer
+
+
+def main():
+    n = 10
+    rng = random.Random(0)
+    e = V.bit_reverse(n) >> V.perm(Bmmc.random(n, rng)) >> V.riffle(n)
+    f = compile_expr(e, engine="pallas")
+
+    # 1. The VJP of a permutation program is its offline inverse program.
+    print("forward program: ", f.program(n))
+    print("vjp program:     ", f.vjp_program(n))
+
+    # 2. jax.grad through the pallas kernels == inverse permutation of the
+    #    cotangent — checked against the ref-engine oracle.
+    x = jnp.asarray(np.random.default_rng(1).normal(size=1 << n),
+                    jnp.float32)
+    w = jnp.asarray(np.random.default_rng(2).normal(size=1 << n),
+                    jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(w * f(x)))(x)
+    oracle = compile_expr(e, engine="ref").inverse(n)(w)
+    print("grad == P^-1(w):", bool(np.array_equal(np.asarray(g),
+                                                  np.asarray(oracle))))
+
+    # 3. A PermuteLayer in a tiny "model": gradient descent recovers a
+    #    signal observed through a permuted channel.
+    layer = PermuteLayer(Bmmc.random(n, rng), axis=1, engine="pallas")
+    target = jnp.asarray(np.random.default_rng(3).normal(size=(4, 1 << n)),
+                         jnp.float32)
+    y_obs = layer(target)
+
+    def loss(params):
+        return jnp.sum((layer(params) - y_obs) ** 2)
+
+    # a permutation is orthogonal, so lr = 1/2 solves this in one step:
+    # p - L^-1(L p - y) = L^-1 y
+    params = jnp.zeros_like(target)
+    params = jax.jit(lambda p: p - 0.5 * jax.grad(loss)(p))(params)
+    print(f"recovery loss after 1 step: {float(loss(params)):.2e}  "
+          f"(exact: {bool(np.allclose(np.asarray(params), np.asarray(target)))})")
+
+    # 4. Batch scaling is free: the tile-geometry cache has the same
+    #    entries no matter the batch size.
+    before = geom_cache_info().currsize
+    for b in (2, 8, 32):
+        f(jnp.tile(x, (b, 1)), batched=True)
+    print("geometry cache entries before/after batches:",
+          before, "->", geom_cache_info().currsize)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,10 @@ Quick tour::
 """
 from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
                  Seq, Two, seq)
-from .optimize import fuse, lower, num_perm_stages, optimize, program_cost
-from .execute import (CompiledExpr, compile_expr, engines, get_engine,
-                      register_engine, run_program)
+from .optimize import (fuse, inverse_program, lower, num_perm_stages,
+                       optimize, program_cost)
+from .execute import (CompiledExpr, compile_expr, engines, geom_cache_info,
+                      get_engine, perm_apply, register_engine, run_program)
 from . import vocab
 from .sort import compiled_sort, sort_expr
 # NB: the fft *function* stays in .fft to avoid shadowing the submodule
@@ -27,8 +28,9 @@ from .fft import compiled_fft, fft_expr
 
 __all__ = [
     "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
-    "Perm", "Seq", "Two", "seq", "fuse", "lower", "num_perm_stages", "optimize",
-    "program_cost", "CompiledExpr", "compile_expr", "engines", "get_engine",
+    "Perm", "Seq", "Two", "seq", "fuse", "inverse_program", "lower",
+    "num_perm_stages", "optimize", "program_cost", "CompiledExpr",
+    "compile_expr", "engines", "geom_cache_info", "get_engine", "perm_apply",
     "register_engine", "run_program", "vocab", "compiled_sort", "sort_expr",
     "compiled_fft", "fft_expr",
 ]

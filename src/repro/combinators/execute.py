@@ -17,10 +17,29 @@ is, so tests can inject instrumented engines.
 once per ``(expr, n)``; kernel plans once per ``(bmmc, t)``; kernel
 executables once per geometry. The returned function is jax-traceable
 (it can be wrapped in ``jax.jit``), and cheap to call as-is.
+
+Autodiff (DESIGN.md §9): every ``Perm`` stage executes through
+:func:`perm_apply`, a ``jax.custom_vjp`` primitive whose backward pass
+applies the *offline-inverted* BMMC (``Bmmc.inverse``) through the same
+engine. A BMMC permutation is orthogonal — its Jacobian transpose is the
+inverse permutation — so no residuals are saved and cotangents ride the
+same geometry-cached tiled kernels as the forward pass (the backward
+pass of a composed program runs the inverted stages in reversed order,
+exactly :func:`repro.combinators.optimize.inverse_program`). Pallas DMA
+kernels have no JVP/transpose rules of their own; this rule is what
+makes ``jax.grad`` flow through the "pallas" engine at all.
+
+Batching: ``run_program`` / ``CompiledExpr.__call__`` take
+``batched=True`` to accept a leading batch axis — ``(B, 2^n)`` or
+``(B, 2^n, d)`` — folded into the kernel grid with the tile plan shared
+across the batch. Injected engines that don't understand ``batched``
+are transparently wrapped with ``jax.vmap`` (the vmap fallback).
 """
 from __future__ import annotations
 
 import functools
+import inspect
+import weakref
 from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
@@ -31,7 +50,7 @@ from ..core.bmmc import Bmmc
 from ..kernels import ref as _ref
 from ..kernels.bmmc_permute import plan_geometry, tiled_permute_tables
 from .ir import Bfly, CmpHalves, Expr, Map, Perm
-from .optimize import Program, lower, fuse
+from .optimize import Program, lower, fuse, inverse_program
 
 EngineFn = Callable[[jax.Array, Bmmc], jax.Array]
 
@@ -63,25 +82,32 @@ def engines() -> tuple:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=512)
-def _geom_executable(geometry: tuple, interpret: bool):
+def _geom_executable(geometry: tuple, interpret: bool, batched: bool = False):
     """One jitted tiled-pass executable per tile geometry. Index tables are
-    arguments, so every stage sharing this geometry reuses the trace."""
+    arguments, so every stage sharing this geometry reuses the trace. The
+    cache key is independent of the batch size: growing B re-specializes
+    the jit trace but never adds a geometry entry."""
     return jax.jit(functools.partial(
-        tiled_permute_tables, geometry=geometry, interpret=interpret))
+        tiled_permute_tables, geometry=geometry, interpret=interpret,
+        batched=batched))
+
+
+def geom_cache_info():
+    """The geometry-executable cache stats (hits/misses/currsize)."""
+    return _geom_executable.cache_info()
 
 
 def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True, batched: bool = False) -> jax.Array:
     from ..kernels import ops
 
     if bmmc.is_identity_perm():
         return x
-    d = x.shape[1] if x.ndim == 2 else 1
-    teff = ops.choose_tile(bmmc.n, x.dtype.itemsize, d, t)
-    if teff is None:  # too small to tile; whole array fits anywhere
-        return _ref.bmmc_ref(x, bmmc)
-    for plan in ops.bmmc_plans(bmmc, teff):
-        run = _geom_executable(plan_geometry(plan), interpret)
+    plans = ops.dispatch_plans(x, bmmc, t, batched)
+    if plans is None:  # too small to tile; whole array fits anywhere
+        return _ref.bmmc_ref(x, bmmc, batched=batched)
+    for plan in plans:
+        run = _geom_executable(plan_geometry(plan), interpret, batched)
         x = run(x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0)
     return x
 
@@ -91,44 +117,117 @@ register_engine("pallas", _pallas_engine)
 
 
 # ---------------------------------------------------------------------------
+# perm_apply — the differentiable permutation primitive
+# ---------------------------------------------------------------------------
+
+_BATCHED_SIG = weakref.WeakKeyDictionary()  # doesn't pin injected engines
+
+
+def _accepts_batched(fn: Callable) -> bool:
+    # only an explicit ``batched`` parameter proves support — a bare
+    # ``**kwargs`` would swallow the flag and permute the wrong axis
+    try:
+        return _BATCHED_SIG[fn]
+    except (KeyError, TypeError):
+        pass
+    try:
+        got = "batched" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins, odd callables
+        got = False
+    try:
+        _BATCHED_SIG[fn] = got
+    except TypeError:  # not weakref-able; just re-probe next time
+        pass
+    return got
+
+
+def _call_engine(fn: EngineFn, x: jax.Array, bmmc: Bmmc,
+                 batched: bool) -> jax.Array:
+    """Invoke an engine, vmapping over the batch axis if it only speaks the
+    unbatched ``(x, bmmc) -> x`` protocol."""
+    if not batched:
+        return fn(x, bmmc)
+    if _accepts_batched(fn):
+        return fn(x, bmmc, batched=True)
+    return jax.vmap(lambda xb: fn(xb, bmmc))(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def perm_apply(x: jax.Array, bmmc: Bmmc,
+               engine: Union[str, EngineFn, None] = None,
+               batched: bool = False) -> jax.Array:
+    """Differentiable BMMC permutation through any engine.
+
+    The VJP applies ``bmmc.inverse()`` — precomputed offline over F2 —
+    through the *same* engine: the cotangent of a pallas-permuted array is
+    itself a pallas permutation (no gather transpose is materialized, and
+    backward passes share the forward geometry cache).
+    """
+    return _call_engine(get_engine(engine), x, bmmc, batched)
+
+
+def _perm_apply_fwd(x, bmmc, engine, batched):
+    return perm_apply(x, bmmc, engine, batched), None
+
+
+def _perm_apply_bwd(bmmc, engine, batched, _res, ct):
+    return (perm_apply(ct, bmmc.inverse(), engine, batched),)
+
+
+perm_apply.defvjp(_perm_apply_fwd, _perm_apply_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Program execution
 # ---------------------------------------------------------------------------
 
-def _apply_bfly(x: jax.Array, twiddles: tuple) -> jax.Array:
-    """(lo, hi) -> (lo + w·hi, lo - w·hi). Complex arrays, or float arrays
-    with a trailing dim of 2 holding (re, im) channels."""
-    h = x.shape[0] // 2
-    lo, hi = x[:h], x[h:]
+def _apply_bfly(x: jax.Array, twiddles: tuple, axis: int = 0) -> jax.Array:
+    """(lo, hi) -> (lo + w·hi, lo - w·hi) along ``axis``. Complex arrays, or
+    float arrays with a trailing dim of 2 holding (re, im) channels."""
+    h = x.shape[axis] // 2
+    lo = jax.lax.slice_in_dim(x, 0, h, axis=axis)
+    hi = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
     if jnp.iscomplexobj(x):
         w = jnp.asarray(np.asarray(twiddles, dtype=np.complex64))
-        if x.ndim > 1:
-            w = w.reshape((h,) + (1,) * (x.ndim - 1))
+        w = w.reshape((1,) * axis + (h,) + (1,) * (x.ndim - axis - 1))
         t = w * hi
-        return jnp.concatenate([lo + t, lo - t], axis=0)
-    if x.ndim != 2 or x.shape[1] != 2:
-        raise ValueError("real-typed Bfly input must have shape (2^n, 2)")
-    wr = jnp.asarray(np.asarray([w.real for w in twiddles], dtype=x.dtype))
-    wi = jnp.asarray(np.asarray([w.imag for w in twiddles], dtype=x.dtype))
-    tre = wr * hi[:, 0] - wi * hi[:, 1]
-    tim = wr * hi[:, 1] + wi * hi[:, 0]
-    t = jnp.stack([tre, tim], axis=1)
-    return jnp.concatenate([lo + t, lo - t], axis=0)
+        return jnp.concatenate([lo + t, lo - t], axis=axis)
+    if x.ndim != axis + 2 or x.shape[-1] != 2:
+        raise ValueError("real-typed Bfly input must have a trailing "
+                         "(re, im) dim of 2")
+    wshape = (1,) * axis + (h,)
+    wr = jnp.asarray(np.asarray([w.real for w in twiddles],
+                                dtype=x.dtype)).reshape(wshape)
+    wi = jnp.asarray(np.asarray([w.imag for w in twiddles],
+                                dtype=x.dtype)).reshape(wshape)
+    tre = wr * hi[..., 0] - wi * hi[..., 1]
+    tim = wr * hi[..., 1] + wi * hi[..., 0]
+    t = jnp.stack([tre, tim], axis=-1)
+    return jnp.concatenate([lo + t, lo - t], axis=axis)
 
 
 def run_program(program: Sequence[Expr], x: jax.Array,
-                engine: Union[str, EngineFn, None] = None) -> jax.Array:
-    """Execute a lowered (primitive-only) stage program."""
-    engine_fn = get_engine(engine)
+                engine: Union[str, EngineFn, None] = None,
+                *, batched: bool = False) -> jax.Array:
+    """Execute a lowered (primitive-only) stage program.
+
+    Differentiable: ``Perm`` stages go through :func:`perm_apply` (offline
+    -inverted backward pass), the rest are plain jnp. ``batched=True``
+    moves the permuted axis to axis 1, with a leading batch dim.
+    """
+    get_engine(engine)  # validate the name up front, even for Perm-free
+    axis = 1 if batched else 0
     for s in program:
         if isinstance(s, Perm):
-            x = engine_fn(x, s.bmmc)
+            x = perm_apply(x, s.bmmc, engine, batched)
         elif isinstance(s, CmpHalves):
-            h = x.shape[0] // 2
-            lo, hi = x[:h], x[h:]
+            h = x.shape[axis] // 2
+            lo = jax.lax.slice_in_dim(x, 0, h, axis=axis)
+            hi = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
             x = jnp.concatenate([jnp.minimum(lo, hi), jnp.maximum(lo, hi)],
-                                axis=0)
+                                axis=axis)
         elif isinstance(s, Bfly):
-            x = _apply_bfly(x, s.twiddles)
+            x = _apply_bfly(x, s.twiddles, axis)
         elif isinstance(s, Map):
             x = s.fn(x)
         else:
@@ -148,11 +247,15 @@ def _lowered_cached(expr: Expr, n: int, optimized: bool) -> Program:
 
 
 class CompiledExpr:
-    """A callable compiled combinator expression.
+    """A callable compiled combinator expression — a first-class JAX value.
 
     Calling it executes the (fused) stage program through the chosen
-    engine. ``program(n)`` exposes the stage program for inspection;
-    ``cost(n, t)`` the modeled transaction report.
+    engine; the result is jit-able, ``jax.grad``-able (``Perm`` stages
+    carry the offline-inverted custom VJP) and batchable via
+    ``batched=True`` (leading batch dim sharing one tile plan).
+    ``program(n)`` exposes the stage program for inspection; ``cost(n,
+    t)`` the modeled transaction report; ``vjp_program(n)`` the exact
+    program the backward pass of a permutation-only expression executes.
     """
 
     def __init__(self, expr: Expr, engine: Union[str, EngineFn],
@@ -168,11 +271,32 @@ class CompiledExpr:
         from .optimize import program_cost
         return program_cost(self.program(n), t, itemsize)
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        n = int(x.shape[0]).bit_length() - 1
-        if (1 << n) != x.shape[0]:
-            raise ValueError(f"array length {x.shape[0]} is not a power of 2")
-        return run_program(self.program(n), x, self.engine)
+    def is_permutation(self, n: int) -> bool:
+        """True if the program is pure ``Perm`` stages (hence invertible)."""
+        return all(isinstance(s, Perm) for s in self.program(n))
+
+    def vjp_program(self, n: int) -> Program:
+        """The offline-inverted program (reversed stages, each BMMC
+        inverted) — what the cotangent flows through. Permutation-only."""
+        return inverse_program(self.program(n))
+
+    def inverse(self, n: int) -> "CompiledExpr":
+        """The compiled inverse of a permutation-only expression."""
+        from .ir import seq
+        inv = seq(*self.vjp_program(n))
+        return compile_expr(inv, engine=self.engine, optimize=self.optimized)
+
+    def __call__(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
+        axis = 1 if batched else 0
+        if x.ndim <= axis:
+            what = ("a leading batch dim plus the permuted axis" if batched
+                    else "a permutable leading axis")
+            raise ValueError(f"input needs {what}, got shape {x.shape}")
+        n = int(x.shape[axis]).bit_length() - 1
+        if (1 << n) != x.shape[axis]:
+            raise ValueError(
+                f"array length {x.shape[axis]} is not a power of 2")
+        return run_program(self.program(n), x, self.engine, batched=batched)
 
 
 _COMPILED: Dict[tuple, CompiledExpr] = {}

@@ -106,6 +106,28 @@ def optimize(expr: Expr, n: int) -> Program:
     return fuse(lower(expr, n))
 
 
+def inverse_program(program: Sequence[Expr]) -> Program:
+    """The exact inverse of a permutation-only program: stages reversed,
+    each BMMC replaced by its offline F2 inverse.
+
+    This is also the *VJP program* of the forward program — a BMMC
+    permutation matrix is orthogonal over the reals, so its Jacobian
+    transpose equals its inverse — which is what lets the executor's
+    backward pass ride the same tiled kernels (DESIGN.md §9). Raises
+    ``TypeError`` on non-``Perm`` stages (``CmpHalves`` is not
+    invertible; ``Bfly``/``Map`` have state-dependent adjoints handled
+    by jax autodiff instead).
+    """
+    out: List[Expr] = []
+    for s in reversed(tuple(program)):
+        if not isinstance(s, Perm):
+            raise TypeError(
+                f"inverse_program needs a permutation-only program; "
+                f"found {type(s).__name__}")
+        out.append(Perm(s.bmmc.inverse()))
+    return tuple(out)
+
+
 def num_perm_stages(program: Iterable[Expr]) -> int:
     return sum(isinstance(s, Perm) for s in program)
 

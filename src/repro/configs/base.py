@@ -33,6 +33,9 @@ class ArchConfig:
     rope_theta: float = 1e4
     rotary_frac: float = 1.0          # fraction of head_dim rotated (chatglm: 0.5)
     window: Optional[int] = None      # sliding-window size for "local" blocks
+    head_shuffle: Optional[str] = None  # BMMC kv-head shuffle engine
+    #   (None = off; "ref" | "pallas" route the shuffle through that
+    #   combinator engine — semantically neutral, see models/attention.py)
     # mlp
     mlp: str = "swiglu"               # swiglu | gelu
     norm: str = "rms"                 # rms | ln

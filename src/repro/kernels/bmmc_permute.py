@@ -43,9 +43,24 @@ def _tile_kernel(in_rows, out_rows, xor_low,   # scalar prefetch (SMEM)
                  o_hbm,                        # output (HBM)
                  tile, obuf, in_sems, out_sems,  # scratch
                  *, rpt: int, row_len: int, in_run: int, out_run: int,
-                 has_tail: bool):
-    """One grid step = one tile. See module docstring."""
-    g = pl.program_id(0)
+                 has_tail: bool, batched: bool):
+    """One grid step = one tile. See module docstring.
+
+    ``batched=True`` adds a leading batch axis to the HBM row views and a
+    leading batch dimension to the grid; the index tables (and therefore
+    the tile geometry) are shared by every batch element.
+    """
+    if batched:
+        b = pl.program_id(0)
+        g = pl.program_id(1)
+    else:
+        g = pl.program_id(0)
+
+    def x_rows(r0, run):
+        return x_hbm.at[b, pl.ds(r0, run)] if batched else x_hbm.at[pl.ds(r0, run)]
+
+    def o_rows(r0, run):
+        return o_hbm.at[b, pl.ds(r0, run)] if batched else o_hbm.at[pl.ds(r0, run)]
 
     # ---- read the tile: rpt rows as rpt/in_run merged DMAs, all in flight --
     n_in = rpt // in_run
@@ -53,7 +68,7 @@ def _tile_kernel(in_rows, out_rows, xor_low,   # scalar prefetch (SMEM)
     for i in range(n_in):
         r0 = in_rows[g, i * in_run]
         cp = pltpu.make_async_copy(
-            x_hbm.at[pl.ds(r0, in_run)],
+            x_rows(r0, in_run),
             tile.at[pl.ds(i * in_run, in_run)],
             in_sems.at[i],
         )
@@ -81,7 +96,7 @@ def _tile_kernel(in_rows, out_rows, xor_low,   # scalar prefetch (SMEM)
         r0 = out_rows[g, i * out_run]
         cp = pltpu.make_async_copy(
             obuf.at[pl.ds(i * out_run, out_run)],
-            o_hbm.at[pl.ds(r0, out_run)],
+            o_rows(r0, out_run),
             out_sems.at[i],
         )
         cp.start()
@@ -101,27 +116,38 @@ def plan_geometry(plan: TilePlan) -> tuple:
 
 
 def tiled_permute_tables(x: jax.Array, in_rows, out_rows, xor_low, src0, *,
-                         geometry: tuple, interpret: bool = True) -> jax.Array:
+                         geometry: tuple, interpret: bool = True,
+                         batched: bool = False) -> jax.Array:
     """One tiled-BMMC pass with the index tables as (traced) arguments.
 
     ``geometry`` is :func:`plan_geometry` output; tables may be jax arrays,
     so this function traces once per geometry under ``jax.jit``.
+
+    ``batched=True`` accepts a leading batch axis — ``(B, 2^n)`` or
+    ``(B, 2^n, d)`` — folded into the HBM row view as ``(B, 2^(n-t), 2^t
+    [, d])`` and into the grid as ``(B, n_tiles)``. Geometry (and hence
+    the compiled kernel cache key) is independent of B; only the jit
+    retrace, not the plan, depends on the batch size.
     """
     n, t, rpt, in_run, out_run, n_tiles = geometry
     row_len = 1 << t
-    has_tail = x.ndim == 2
-    d = x.shape[1] if has_tail else 1
-    row_view = (1 << (n - t), row_len, d) if has_tail else (1 << (n - t), row_len)
+    lead = 1 if batched else 0
+    has_tail = x.ndim == 2 + lead
+    d = x.shape[1 + lead] if has_tail else 1
+    row_view = (1 << (n - t), row_len) + ((d,) if has_tail else ())
+    if batched:
+        row_view = (x.shape[0],) + row_view
     xv = x.reshape(row_view)
     tile_shape = (rpt, row_len, d) if has_tail else (rpt, row_len)
 
     kern = functools.partial(
         _tile_kernel, rpt=rpt, row_len=row_len,
-        in_run=in_run, out_run=out_run, has_tail=has_tail,
+        in_run=in_run, out_run=out_run, has_tail=has_tail, batched=batched,
     )
+    grid = (x.shape[0], n_tiles) if batched else (n_tiles,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(n_tiles,),
+        grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=_HBM),   # x rows
             pl.BlockSpec(memory_space=_VMEM),  # src0
@@ -140,7 +166,7 @@ def tiled_permute_tables(x: jax.Array, in_rows, out_rows, xor_low, src0, *,
         out_shape=jax.ShapeDtypeStruct(row_view, x.dtype),
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",),
+            dimension_semantics=("arbitrary",) * len(grid),
         ),
     )(
         jnp.asarray(in_rows), jnp.asarray(out_rows),
@@ -149,11 +175,13 @@ def tiled_permute_tables(x: jax.Array, in_rows, out_rows, xor_low, src0, *,
     return out.reshape(x.shape)
 
 
-def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True) -> jax.Array:
-    """Apply one tiled-BMMC pass. ``x``: (2^n,) or (2^n, d)."""
+def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True,
+                  batched: bool = False) -> jax.Array:
+    """Apply one tiled-BMMC pass. ``x``: (2^n,) or (2^n, d); with
+    ``batched=True``, (B, 2^n) or (B, 2^n, d)."""
     return tiled_permute_tables(
         x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0,
-        geometry=plan_geometry(plan), interpret=interpret,
+        geometry=plan_geometry(plan), interpret=interpret, batched=batched,
     )
 
 

@@ -60,23 +60,37 @@ def bmmc_plans(bmmc: Bmmc, t: int):
     return _plans_cached(bmmc.rows, bmmc.c, t)
 
 
+def dispatch_plans(x: jax.Array, bmmc: Bmmc, t: Optional[int],
+                   batched: bool) -> Optional[tuple]:
+    """The tiled-kernel dispatch decision for this array: the pass plans,
+    or None when the array is too small to tile (callers fall back to the
+    reference gather). Shared by every pallas execution path."""
+    lead = 1 if batched else 0
+    d = x.shape[1 + lead] if x.ndim == 2 + lead else 1
+    teff = choose_tile(bmmc.n, x.dtype.itemsize, d, t)
+    return None if teff is None else bmmc_plans(bmmc, teff)
+
+
 def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
-                 engine: str = "pallas", interpret: bool = True) -> jax.Array:
+                 engine: str = "pallas", interpret: bool = True,
+                 batched: bool = False) -> jax.Array:
     """Permute ``x`` (shape (2^n,) or (2^n, d)) by ``out[A i ^ c] = x[i]``.
 
     ``engine``: "pallas" (tiled kernels) or "ref" (pure-jnp oracle).
+    ``batched=True`` shifts the permuted axis to axis 1 — ``x`` is
+    ``(B, 2^n)`` or ``(B, 2^n, d)`` and all batch rows share one plan.
     """
-    assert x.shape[0] == bmmc.size, (x.shape, bmmc.n)
+    lead = 1 if batched else 0
+    assert x.shape[lead] == bmmc.size, (x.shape, bmmc.n)
     if engine == "ref":
-        return _ref.bmmc_ref(x, bmmc)
+        return _ref.bmmc_ref(x, bmmc, batched=batched)
     if bmmc.is_identity_perm():
         return x
-    d = x.shape[1] if x.ndim == 2 else 1
-    teff = choose_tile(bmmc.n, x.dtype.itemsize, d, t)
-    if teff is None:
-        return _ref.bmmc_ref(x, bmmc)
-    for plan in bmmc_plans(bmmc, teff):
-        x = tiled_permute(x, plan, interpret=interpret)
+    plans = dispatch_plans(x, bmmc, t, batched)
+    if plans is None:
+        return _ref.bmmc_ref(x, bmmc, batched=batched)
+    for plan in plans:
+        x = tiled_permute(x, plan, interpret=interpret, batched=batched)
     return x
 
 

@@ -30,10 +30,16 @@ def _src_table(rows: tuple, c: int) -> np.ndarray:
     return bmmc_indices(Bmmc(rows, c))
 
 
-def bmmc_ref(x: jax.Array, bmmc: Bmmc) -> jax.Array:
-    """Apply the BMMC permutation along the leading axis (pure jnp gather)."""
-    assert x.shape[0] == bmmc.size, (x.shape, bmmc.n)
-    return jnp.take(x, jnp.asarray(_src_table(bmmc.rows, bmmc.c)), axis=0)
+def bmmc_ref(x: jax.Array, bmmc: Bmmc, *, batched: bool = False) -> jax.Array:
+    """Apply the BMMC permutation along the leading axis (pure jnp gather).
+
+    ``batched=True`` shifts the permuted axis to axis 1: ``x`` is
+    ``(B, 2^n)`` or ``(B, 2^n, d)`` and every batch row shares the one
+    offline gather table.
+    """
+    axis = 1 if batched else 0
+    assert x.shape[axis] == bmmc.size, (x.shape, bmmc.n)
+    return jnp.take(x, jnp.asarray(_src_table(bmmc.rows, bmmc.c)), axis=axis)
 
 
 def bmmc_ref_jnp(x: jax.Array, bmmc: Bmmc) -> jax.Array:

@@ -6,6 +6,15 @@ causal+sliding-window, and full (cross) attention. This is the memory-safe
 substrate required for the 32k prefill shapes; kernel-level flash is a
 documented perf-iteration candidate (the roofline shows whether it is worth
 it on TPU — see EXPERIMENTS.md §Perf).
+
+Head shuffling (``head_perm``): an optional BMMC permutation of the kv-head
+axis, applied consistently to k/v, to q at kv-head granularity (each kv
+head drags its GQA group along), and inverted on the output heads — so
+the result is bit-identical to the unshuffled call while the layout
+travelling through the kernel is permuted. This is the model-facing use
+of the batched differentiable BMMC executor (DESIGN.md §9): sharded or
+interleaved head layouts become one tiled permutation pass instead of a
+gather, and gradients flow through the offline-inverted program.
 """
 from __future__ import annotations
 
@@ -15,7 +24,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.bmmc import Bmmc
+from .permute import permute_axis
+
 NEG_INF = -1e30
+
+
+def default_head_perm(n_kv_heads: int) -> Optional[Bmmc]:
+    """The canonical head shuffle: bit-reversal of the kv-head index.
+
+    Returns None when there is nothing to shuffle (fewer than 2 kv heads
+    or a non-power-of-two head count).
+    """
+    if n_kv_heads < 2 or n_kv_heads & (n_kv_heads - 1):
+        return None
+    return Bmmc.bit_reverse(n_kv_heads.bit_length() - 1)
 
 
 def _block_bias(q_pos, k_pos, kind: str, window: Optional[int]):
@@ -28,11 +51,14 @@ def _block_bias(q_pos, k_pos, kind: str, window: Optional[int]):
 
 
 def attention(q, k, v, *, kind: str = "causal", window: Optional[int] = None,
-              q_offset=0, kv_block: int = 1024, softmax_scale: Optional[float] = None):
+              q_offset=0, kv_block: int = 1024, softmax_scale: Optional[float] = None,
+              head_perm: Optional[Bmmc] = None, head_perm_engine="ref"):
     """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = G * KV.
 
     Returns (B, Sq, H, D). ``q_offset`` shifts query positions (prefill
     continuation). Scans over KV blocks with an online-softmax carry.
+    ``head_perm`` (a BMMC on log2(KV) bits) shuffles the kv-head layout
+    through the kernel and un-shuffles the output — semantically neutral.
     """
     b, sq, h, d = q.shape
     _, skv, kvh, _ = k.shape
@@ -45,7 +71,14 @@ def attention(q, k, v, *, kind: str = "causal", window: Optional[int] = None,
         kv_block -= 1
     nkv = skv // kv_block
 
+    if head_perm is not None:
+        assert head_perm.size == kvh, (head_perm.n, kvh)
+        k = permute_axis(k, head_perm, axis=2, engine=head_perm_engine)
+        v = permute_axis(v, head_perm, axis=2, engine=head_perm_engine)
+
     qg = q.reshape(b, sq, kvh, g, d)
+    if head_perm is not None:
+        qg = permute_axis(qg, head_perm, axis=2, engine=head_perm_engine)
     kb = k.reshape(b, nkv, kv_block, kvh, d).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(b, nkv, kv_block, kvh, d).transpose(1, 0, 2, 3, 4)
 
@@ -75,21 +108,35 @@ def attention(q, k, v, *, kind: str = "causal", window: Optional[int] = None,
     (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
                                   (kb, vb, jnp.arange(nkv)))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    out = out.transpose(0, 3, 1, 2, 4)  # (b, sq, kvh, g, d)
+    if head_perm is not None:
+        out = permute_axis(out, head_perm.inverse(), axis=2,
+                           engine=head_perm_engine)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
 def decode_attention(q, k_cache, v_cache, length, *, window: Optional[int] = None,
-                     softmax_scale: Optional[float] = None):
+                     softmax_scale: Optional[float] = None,
+                     head_perm: Optional[Bmmc] = None, head_perm_engine="ref"):
     """Single-token attention over a KV cache.
 
     q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); ``length``: number of
     valid cache entries (the new token's k/v must already be inserted).
+    ``head_perm`` shuffles the kv-head layout exactly as in :func:`attention`.
     """
     b, _, h, d = q.shape
     _, s, kvh, _ = k_cache.shape
     g = h // kvh
     scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(d)
+    if head_perm is not None:
+        assert head_perm.size == kvh, (head_perm.n, kvh)
+        k_cache = permute_axis(k_cache, head_perm, axis=2,
+                               engine=head_perm_engine)
+        v_cache = permute_axis(v_cache, head_perm, axis=2,
+                               engine=head_perm_engine)
     qg = q.reshape(b, kvh, g, d)
+    if head_perm is not None:
+        qg = permute_axis(qg, head_perm, axis=1, engine=head_perm_engine)
     sc = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
                     preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(s)
@@ -100,4 +147,7 @@ def decode_attention(q, k_cache, v_cache, length, *, window: Optional[int] = Non
     p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache,
                      preferred_element_type=jnp.float32)
+    if head_perm is not None:
+        out = permute_axis(out, head_perm.inverse(), axis=1,
+                           engine=head_perm_engine)
     return out.reshape(b, 1, h, d).astype(q.dtype)

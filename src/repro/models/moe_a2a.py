@@ -12,6 +12,18 @@ This is the data-dependent instance of the distributed-BP pattern in
 core/distributed.py: the (token-slot <-> expert-slot) relayout is the
 exchange round; routing metadata rides along with the payload.
 
+``dispatch_shuffle=True`` adds a *static* BMMC permutation of the send
+slots inside each peer's capacity block (routing metadata rides along, so
+expert compute is unaffected; the return trip is inverse-permuted) — the
+differentiable batched BMMC executor as a dispatch layer (DESIGN.md §9).
+It de-correlates slot addresses from routing order, and because it is
+offline and affine it fuses with any surrounding BMMC relayout instead of
+costing a data-dependent gather. The permutation itself is exactly
+neutral; enabling the flag also rounds the per-peer capacity up to a
+power of two (the shuffle's block size), which can *reduce* token drops
+versus the unshuffled run when a peer block overflows — at equal
+effective capacity the outputs are bit-identical (tested).
+
 Token layout inside shard_map: batch over the dp axes, **sequence over
 ``model``** — the sequence-parallel residual layout.
 """
@@ -25,10 +37,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..combinators.execute import perm_apply
+from ..core.bmmc import Bmmc
+from ..kernels.ref import bmmc_ref
+
+
+def _slot_shuffle(buf, bmmc, *, inverse: bool = False):
+    """Permute the slot axis (axis 1) of a (peers, cap[, e]) buffer by a
+    static BMMC; every peer block shares the one offline plan. Integer
+    metadata takes the plain gather (no VJP machinery on int dtypes)."""
+    b = bmmc.inverse() if inverse else bmmc
+    if jnp.issubdtype(buf.dtype, jnp.integer):
+        return bmmc_ref(buf, b, batched=True)
+    return perm_apply(buf, b, "ref", True)
+
 
 def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
                 n_experts: int, capacity_factor: float,
-                model_axis: str, dp_axes: Tuple[str, ...]):
+                model_axis: str, dp_axes: Tuple[str, ...],
+                dispatch_shuffle: bool = False):
     """Per-device body. x: (T_local, E). Expert weights arrive model-sharded
     on dim 0 and FSDP-sharded over dp on the embed dim; gathered here."""
     t, e = x.shape
@@ -60,6 +87,9 @@ def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     # -- pack per-peer send buffers --------------------------------------------
     cap = int(np.ceil(top_k * t * capacity_factor / n_peers))
     cap = max(8, int(np.ceil(cap / 8)) * 8)
+    if dispatch_shuffle:  # slot shuffle needs a power-of-two block
+        cap = 1 << (cap - 1).bit_length()
+        slot_bmmc = Bmmc.bit_reverse(cap.bit_length() - 1)
     flat_ids = ids.reshape(-1)
     peer = flat_ids // xpp
     order = jnp.argsort(peer)
@@ -79,9 +109,14 @@ def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     send_eid = send_eid.at[slot].set(eid_s, mode="drop")
 
     # -- exchange: tokens travel to their experts' owners ----------------------
-    recv = jax.lax.all_to_all(send.reshape(n_peers, cap, e), model_axis,
+    send3 = send.reshape(n_peers, cap, e)
+    send_eid2 = send_eid.reshape(n_peers, cap)
+    if dispatch_shuffle:  # static slot relayout; eids ride along
+        send3 = _slot_shuffle(send3, slot_bmmc)
+        send_eid2 = _slot_shuffle(send_eid2, slot_bmmc)
+    recv = jax.lax.all_to_all(send3, model_axis,
                               split_axis=0, concat_axis=0, tiled=True)
-    recv_eid = jax.lax.all_to_all(send_eid.reshape(n_peers, cap), model_axis,
+    recv_eid = jax.lax.all_to_all(send_eid2, model_axis,
                                   split_axis=0, concat_axis=0, tiled=True)
     rt = recv.reshape(n_peers * cap, e)
     re_ = recv_eid.reshape(n_peers * cap)
@@ -114,6 +149,8 @@ def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     # -- return trip + weighted combine ----------------------------------------
     back = jax.lax.all_to_all(y_recv.reshape(n_peers, cap, e), model_axis,
                               split_axis=0, concat_axis=0, tiled=True)
+    if dispatch_shuffle:  # undo the slot relayout: back to packing order
+        back = _slot_shuffle(back, slot_bmmc, inverse=True)
     back = back.reshape(n_peers * cap, e)
     y_slot = jnp.take(back, jnp.minimum(slot, n_peers * cap - 1), axis=0)
     y_slot = jnp.where(keep[:, None], y_slot, 0)
@@ -123,9 +160,12 @@ def _device_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
 
 
 def moe_ffn_a2a(x, router_w, w_gate, w_up, w_down, *, top_k: int,
-                capacity_factor: float, mesh):
+                capacity_factor: float, mesh, dispatch_shuffle: bool = False):
     """x: (B, S, E). Returns (out (B,S,E), aux). shard_map over the mesh:
-    batch -> dp axes, sequence -> model axis (sequence-parallel layout)."""
+    batch -> dp axes, sequence -> model axis (sequence-parallel layout).
+    ``dispatch_shuffle`` BMMC-permutes send slots within each peer block
+    (neutral at equal capacity; rounds capacity to a power of two — see
+    module docstring)."""
     from jax.experimental.shard_map import shard_map
     from ..parallel.sharding import dp_axes as _dp
     dp = _dp(mesh)
@@ -134,7 +174,8 @@ def moe_ffn_a2a(x, router_w, w_gate, w_up, w_down, *, top_k: int,
 
     body = functools.partial(
         _device_moe, top_k=top_k, n_experts=n_experts,
-        capacity_factor=capacity_factor, model_axis="model", dp_axes=dp)
+        capacity_factor=capacity_factor, model_axis="model", dp_axes=dp,
+        dispatch_shuffle=dispatch_shuffle)
 
     def fn(xg, rw, wgt, wupt, wdt):
         b, s, e = xg.shape

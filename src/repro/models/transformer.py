@@ -27,7 +27,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from .layers import (ParamDef, apply_rope, layer_norm, rms_norm, stack_defs,
                      tree_map_defs)
-from .attention import attention, decode_attention
+from .attention import attention, decode_attention, default_head_perm
 from .moe import moe_ffn
 from .ssm import (causal_conv1d, rglru, rglru_step, ssd_chunked,
                   ssd_decode_step)
@@ -229,14 +229,23 @@ def _self_attn(cfg, p, x, ctx, *, window=None, kind_attn="causal", cache=None):
         pos = ctx["pos"] + jnp.arange(x.shape[1])
         q = apply_rope(q, pos, cfg.rope_theta, rd)
         k = apply_rope(k, pos, cfg.rope_theta, rd)
+    hp = default_head_perm(cfg.n_kv_heads) if cfg.head_shuffle else None
+    if cfg.head_shuffle and hp is None:
+        raise ValueError(
+            f"head_shuffle={cfg.head_shuffle!r} needs a power-of-two "
+            f"kv-head count >= 2, got n_kv_heads={cfg.n_kv_heads}")
+    hp_kw = ({"head_perm": hp, "head_perm_engine": cfg.head_shuffle}
+             if hp is not None else {})
     if mode == "decode":
         kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, ctx["pos"], axis=1)
         vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, ctx["pos"], axis=1)
+        # the shuffle is output-neutral, so decode skips it: re-permuting
+        # the whole KV cache every token would be O(S^2) over a decode
         out = decode_attention(q, kc, vc, ctx["pos"] + 1, window=window)
         new_cache = {"k": kc, "v": vc}
     else:
         out = attention(q, k, v, kind=kind_attn, window=window,
-                        kv_block=cfg.kv_block)
+                        kv_block=cfg.kv_block, **hp_kw)
         new_cache = {"k": k, "v": v} if mode == "prefill" else None
     y = jnp.einsum("bshd,hde->bse", out, p["wo"])
     return y, new_cache

@@ -3,11 +3,16 @@
 Pure function of (params, opt_state, batch); gradient accumulation folds
 microbatches with a ``lax.scan`` so the peak activation footprint is one
 microbatch regardless of global batch.
+
+``loss_fn`` may override the model loss with any ``(params, batch) ->
+(loss, parts_dict)`` — e.g. a loss routed through a
+:class:`repro.models.permute.PermuteLayer`, so ``jax.grad`` exercises
+the pallas BMMC custom VJP inside a full (grads + AdamW) training step.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,32 +22,42 @@ from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update, state_shapes
 def make_train_step(cfg: ArchConfig, mesh=None,
                     opt_cfg: Optional[AdamWConfig] = None,
-                    grad_accum: int = 1):
+                    grad_accum: int = 1,
+                    loss_fn: Optional[Callable] = None):
     opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
 
     def loss_of(params, batch):
+        if loss_fn is not None:
+            return loss_fn(params, batch)
         return M.loss_fn(cfg, params, batch, mesh=mesh)
 
     def train_step(params, opt_state, batch):
         if grad_accum > 1:
-            b = batch["tokens"].shape[0]
-            mb = b // grad_accum
+            b = jax.tree.leaves(batch)[0].shape[0]  # custom losses may
+            mb = b // grad_accum                    # not carry "tokens"
             micro = jax.tree.map(
                 lambda x: x.reshape((grad_accum, mb) + x.shape[1:]), batch)
 
             def acc(carry, mbatch):
-                g_acc, l_acc = carry
-                (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                g_acc, l_acc, p_acc = carry
+                (loss, parts), g = jax.value_and_grad(loss_of, has_aux=True)(
                     params, mbatch)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + loss), None
+                p_acc = jax.tree.map(jnp.add, p_acc, parts)
+                return (g_acc, l_acc + loss, p_acc), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
-                                            micro)
+            p_shape = jax.eval_shape(
+                lambda p, mb_: loss_of(p, mb_)[1], params,
+                jax.tree.map(lambda x: x[0], micro))
+            p0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shape)
+            (grads, loss, parts), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32), p0), micro)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             loss = loss / grad_accum
-            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+            # same metric keys as grad_accum=1: parts averaged over
+            # microbatches
+            parts = jax.tree.map(lambda v: v / grad_accum, parts)
         else:
             (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(
                 params, batch)

@@ -1,0 +1,266 @@
+"""Gradcheck: jax.grad through compiled combinator programs.
+
+The executor's ``Perm`` stages carry a custom VJP that routes cotangents
+through the offline-inverted program (DESIGN.md §9). These tests pin it
+three ways: against the inverse-permutation oracle (the VJP of a pure
+permutation program *is* the inverse program), against finite
+differences, and pallas-engine against ref-engine on sort / FFT / vocab
+programs — including inside a full training step (grads + AdamW).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.combinators import (compile_expr, inverse_program, perm_apply,
+                               run_program, vocab as V)
+from repro.combinators.fft import compiled_fft, to_planar
+from repro.combinators.sort import compiled_sort
+from repro.core.bmmc import Bmmc
+
+ENGINES = ("ref", "pallas")
+
+
+def _x(n, seed, shape=()):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape + (1 << n,)).astype(np.float32))
+
+
+def _fd_check(loss, x, grad, idx, eps=1e-3, tol=2e-2):
+    """Central-difference spot check of ``grad`` at flat positions idx."""
+    flat = np.asarray(x).reshape(-1)
+    g = np.asarray(grad).reshape(-1)
+    for i in idx:
+        e = np.zeros_like(flat)
+        e[i] = eps
+        up = loss(jnp.asarray((flat + e).reshape(x.shape)))
+        dn = loss(jnp.asarray((flat - e).reshape(x.shape)))
+        fd = (float(up) - float(dn)) / (2 * eps)
+        assert abs(fd - g[i]) <= tol * max(1.0, abs(fd)), (i, fd, g[i])
+
+
+# ---------------------------------------------------------------------------
+# perm_apply: the inverse-permutation oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("engine", ENGINES)
+def test_perm_grad_is_inverse_permutation(engine):
+    """d/dx sum(w * P(x)) == P^-1(w), exactly, on both engines."""
+    n = 8
+    rng = random.Random(0)
+    for trial in range(3):
+        b = Bmmc.random(n, rng) if trial % 2 else Bmmc.random_bpc(n, rng)
+        x, w = _x(n, trial), _x(n, 100 + trial)
+        g = jax.grad(lambda x: jnp.sum(w * perm_apply(x, b, engine)))(x)
+        oracle = perm_apply(w, b.inverse(), "ref")
+        assert np.array_equal(np.asarray(g), np.asarray(oracle)), (engine, trial)
+
+
+@pytest.mark.tier1
+def test_compiled_program_vjp_is_inverse_program():
+    """grad through a fused multi-stage permutation program == the
+    offline-inverted program applied to the cotangent."""
+    n = 9
+    e = (V.bit_reverse(n) >> V.parm(0b1011, V.rev(n - 1))
+         >> V.perm(Bmmc.random(n, random.Random(2))) >> V.riffle(n))
+    for engine in ENGINES:
+        f = compile_expr(e, engine=engine)
+        prog = f.program(n)
+        w = _x(n, 3)
+        g = jax.grad(lambda x: jnp.sum(w * f(x)))(_x(n, 4))
+        oracle = run_program(inverse_program(prog), w, "ref")
+        assert np.array_equal(np.asarray(g), np.asarray(oracle)), engine
+        assert f.vjp_program(n) == inverse_program(prog)
+
+
+@pytest.mark.tier1
+def test_batched_grad_matches_per_row():
+    n = 8
+    e = V.perm(Bmmc.random(n, random.Random(5))) >> V.rev(n)
+    f = compile_expr(e, engine="pallas")
+    xb = _x(n, 6, shape=(3,))
+    loss_b = lambda x: jnp.sum(jnp.cos(f(x, batched=True)))
+    gb = jax.grad(loss_b)(xb)
+    for i in range(3):
+        gi = jax.grad(lambda x: jnp.sum(jnp.cos(f(x))))(xb[i])
+        assert np.allclose(np.asarray(gb[i]), np.asarray(gi), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Workload programs: sort / FFT / vocab, pallas vs ref + finite differences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_sort_grad_engines_agree_and_fd():
+    """Sorting networks are piecewise-linear; grads route to the argsort.
+    ISSUE 2 acceptance: pallas grad == ref grad to 1e-5."""
+    n = 6
+    x = _x(n, 7)
+    w = _x(n, 8)
+    grads = {}
+    for engine in ENGINES:
+        f = compiled_sort(n, engine=engine)
+        loss = lambda x, f=f: jnp.sum(w * f(x))
+        grads[engine] = np.asarray(jax.grad(loss)(x))
+        _fd_check(loss, x, grads[engine], idx=[0, 5, 31, 63])
+    assert np.allclose(grads["pallas"], grads["ref"], atol=1e-5)
+    # oracle: d sum(w*sort(x)) / dx_i = w at x_i's sorted position
+    order = np.argsort(np.asarray(x), kind="stable")
+    want = np.empty_like(np.asarray(w))
+    want[order] = np.asarray(w)
+    assert np.allclose(grads["ref"], want, atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_fft_grad_engines_agree_and_fd():
+    """Planar (re,im) FFT: linear map, so grads are engine-exact."""
+    n = 6
+    x = to_planar(np.random.default_rng(9).normal(size=1 << n)
+                  + 1j * np.random.default_rng(10).normal(size=1 << n))
+    w = jnp.asarray(np.random.default_rng(11).normal(
+        size=(1 << n, 2)).astype(np.float32))
+    grads = {}
+    for engine in ENGINES:
+        f = compiled_fft(n, engine=engine)
+        loss = lambda x, f=f: jnp.sum(w * f(x))
+        grads[engine] = np.asarray(jax.grad(loss)(x))
+        _fd_check(loss, x, grads[engine], idx=[0, 17, 64, 127], eps=1e-2)
+    assert np.allclose(grads["pallas"], grads["ref"], atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_vocab_program_grads_fd():
+    """A mixed vocab program (perm + emap nonlinearity) gradchecks."""
+    n = 7
+    e = (V.riffle(n) >> V.emap("tanh", jnp.tanh) >> V.bit_reverse(n)
+         >> V.emap("sq", lambda v: v * v))
+    x = _x(n, 12)
+    grads = {}
+    for engine in ENGINES:
+        f = compile_expr(e, engine=engine)
+        loss = lambda x, f=f: jnp.sum(f(x))
+        grads[engine] = np.asarray(jax.grad(loss)(x))
+        _fd_check(loss, x, grads[engine], idx=[1, 40, 100])
+    assert np.allclose(grads["pallas"], grads["ref"], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Model / train-step integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_attention_head_shuffle_grads_match():
+    """Head shuffle is neutral in value AND in gradients."""
+    from repro.models.attention import attention, default_head_perm
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 8, 8, 4), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 4, 4), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 4, 4), jnp.float32)
+    hp = default_head_perm(4)
+
+    def loss(q, hp):
+        return jnp.sum(attention(q, k, v, head_perm=hp) ** 2)
+
+    g0 = jax.grad(lambda q: loss(q, None))(q)
+    g1 = jax.grad(lambda q: loss(q, hp))(q)
+    assert np.allclose(np.asarray(g0), np.asarray(g1), atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_train_step_grad_through_pallas_permute():
+    """ISSUE 2 tentpole: jax.grad through a pallas BMMC permute inside a
+    real training step (loss -> grads -> AdamW update), matching the
+    ref-engine oracle step bit-for-bit in its metrics."""
+    from repro.configs import ARCHS, reduce_for_smoke
+    from repro.models.permute import PermuteLayer
+    from repro.train.step import make_train_step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+
+    n = 10
+    bmmc = Bmmc.random(n, random.Random(21))
+    cfg = reduce_for_smoke(ARCHS["mistral-nemo-12b"])
+    params = {"w": _x(n, 22)}
+    batch = {"x": _x(n, 23, shape=(4,)), "y": _x(n, 24, shape=(4,))}
+
+    def make_loss(engine):
+        layer = PermuteLayer(bmmc, axis=1, engine=engine)
+
+        def loss_fn(params, batch):
+            pred = layer(batch["x"] * params["w"])
+            l = jnp.mean((pred - batch["y"]) ** 2)
+            return l, {"mse": l}
+        return loss_fn
+
+    metrics = {}
+    new_w = {}
+    for engine in ENGINES:
+        step_fn, opt_cfg = make_train_step(
+            cfg, opt_cfg=AdamWConfig(), loss_fn=make_loss(engine))
+        opt_state = adamw_init(params, opt_cfg)
+        new_params, _, m = jax.jit(step_fn)(params, opt_state, batch)
+        assert np.isfinite(float(m["loss"]))
+        assert float(m["grad_norm"]) > 0
+        metrics[engine] = m
+        new_w[engine] = np.asarray(new_params["w"])
+        assert not np.array_equal(new_w[engine], np.asarray(params["w"]))
+    assert np.allclose(metrics["pallas"]["grad_norm"],
+                       metrics["ref"]["grad_norm"], rtol=1e-6)
+    assert np.allclose(new_w["pallas"], new_w["ref"], atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_train_step_loss_override_with_grad_accum():
+    """A custom (tokens-free) loss works under gradient accumulation and
+    matches the unaccumulated grads."""
+    from repro.configs import ARCHS, reduce_for_smoke
+    from repro.models.permute import PermuteLayer
+    from repro.train.step import make_train_step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+
+    n = 8
+    layer = PermuteLayer(Bmmc.random(n, random.Random(31)), axis=1,
+                         engine="ref")
+    cfg = reduce_for_smoke(ARCHS["mistral-nemo-12b"])
+    params = {"w": _x(n, 32)}
+    batch = {"x": _x(n, 33, shape=(4,)), "y": _x(n, 34, shape=(4,))}
+
+    def loss_fn(params, batch):
+        l = jnp.mean((layer(batch["x"] * params["w"]) - batch["y"]) ** 2)
+        return l, {"mse": l}
+
+    outs = {}
+    for accum in (1, 2):
+        step_fn, opt_cfg = make_train_step(cfg, opt_cfg=AdamWConfig(),
+                                           grad_accum=accum, loss_fn=loss_fn)
+        new_params, _, m = jax.jit(step_fn)(
+            params, adamw_init(params, opt_cfg), batch)
+        assert np.isfinite(float(m["loss"]))
+        outs[accum] = np.asarray(new_params["w"])
+    assert np.allclose(outs[1], outs[2], atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_model_train_step_with_head_shuffle_cfg():
+    """The cfg knob: a smoke-arch train step with head_shuffle on yields
+    the same loss as off, and finite grads (perm VJP inside the stack)."""
+    import dataclasses
+    from repro.configs import ARCHS, reduce_for_smoke
+    from repro.models import model as M
+    from repro.train.step import make_train_step, init_opt
+
+    key = jax.random.PRNGKey(3)
+    cfg0 = reduce_for_smoke(ARCHS["mistral-nemo-12b"])
+    cfg1 = dataclasses.replace(cfg0, head_shuffle="ref")
+    params = M.init(cfg1, key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg1.vocab_size),
+             "labels": jax.random.randint(key, (2, 16), 0, cfg1.vocab_size)}
+    l0, _ = M.loss_fn(cfg0, params, batch)
+    l1, _ = M.loss_fn(cfg1, params, batch)
+    assert np.array_equal(np.asarray(l0), np.asarray(l1))
+    step_fn, _ = make_train_step(cfg1)
+    _, _, m = jax.jit(step_fn)(params, init_opt(cfg1, params), batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))

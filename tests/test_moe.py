@@ -52,6 +52,39 @@ def test_router_topk_weights_normalized():
     assert ids.shape == (32, 4)
 
 
+@pytest.mark.tier1
+def test_a2a_slot_shuffle_roundtrips_with_metadata():
+    """The dispatch_shuffle building block: payload and int metadata take
+    the same slot permutation and the inverse restores packing order."""
+    from repro.core.bmmc import Bmmc
+    from repro.models.moe_a2a import _slot_shuffle
+
+    peers, cap, e = 4, 32, 8
+    bmmc = Bmmc.bit_reverse(cap.bit_length() - 1)
+    payload = jax.random.normal(jax.random.PRNGKey(0), (peers, cap, e))
+    eid = jax.random.randint(jax.random.PRNGKey(1), (peers, cap), 0, 7)
+    ps, es = _slot_shuffle(payload, bmmc), _slot_shuffle(eid, bmmc)
+    assert not np.array_equal(np.asarray(ps), np.asarray(payload))
+    # metadata rides along: the multiset of (eid, payload-row) pairs is
+    # preserved within each peer block
+    for p in range(peers):
+        src = sorted((int(e_),) + tuple(row) for e_, row in
+                     zip(np.asarray(eid[p]), np.asarray(payload[p])))
+        got = sorted((int(e_),) + tuple(row) for e_, row in
+                     zip(np.asarray(es[p]), np.asarray(ps[p])))
+        assert src == got
+    assert np.array_equal(
+        np.asarray(_slot_shuffle(ps, bmmc, inverse=True)),
+        np.asarray(payload))
+    assert np.array_equal(
+        np.asarray(_slot_shuffle(es, bmmc, inverse=True)), np.asarray(eid))
+    # differentiable: grad of a shuffled sum-loss is the inverse shuffle
+    w = jax.random.normal(jax.random.PRNGKey(2), (peers, cap, e))
+    g = jax.grad(lambda x: jnp.sum(w * _slot_shuffle(x, bmmc)))(payload)
+    assert np.allclose(np.asarray(g),
+                       np.asarray(_slot_shuffle(w, bmmc, inverse=True)))
+
+
 def test_capacity_drops_tokens():
     """With a tiny capacity factor, some token outputs must be zero."""
     t, e, f, x_n, k = 256, 8, 8, 2, 1
@@ -102,6 +135,11 @@ g1 = jax.jit(jax.grad(lambda w_: jnp.sum(
 g2 = jax.grad(lambda w_: jnp.sum(ref(x, w_) ** 2))(wg)
 rel = np.abs(np.asarray(g1) - np.asarray(g2)).max() / np.abs(np.asarray(g2)).max()
 assert rel < 1e-3, rel
+# dispatch_shuffle neutrality at no-drop capacity: bit-identical output
+out_s, _ = jax.jit(lambda x: moe_ffn_a2a(x, rw, wg, wu, wd, top_k=K,
+                                         capacity_factor=8.0, mesh=mesh,
+                                         dispatch_shuffle=True))(x)
+assert np.array_equal(np.asarray(out), np.asarray(out_s))
 print("OK")
 """
 
