@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Run with
 ``PYTHONPATH=src python -m benchmarks.run [--only fig9,...]``.
+``--json OUT.json`` additionally writes the rows (plus run metadata) as
+machine-readable JSON — the format the ``BENCH_*.json`` perf-trajectory
+files at the repo root record.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -17,17 +22,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
                          "fig9,fig10,transpose,sort,khc,roofline,"
-                         "combinators,autodiff")
+                         "combinators,autodiff,stagefusion")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast sanity subset (combinators + autodiff; "
-                         "pairs with `pytest -m tier1` as the quick "
-                         "tier-1 smoke entry point)")
+                    help="fast sanity subset (combinators + autodiff + "
+                         "stagefusion; pairs with `pytest -m tier1` as the "
+                         "quick tier-1 smoke entry point)")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write rows + metadata as JSON")
     args = ap.parse_args()
     if args.smoke and args.only:
         ap.error("--smoke and --only are mutually exclusive")
     want = set(args.only.split(",")) if args.only else None
     if args.smoke:
-        want = {"combinators", "autodiff"}
+        want = {"combinators", "autodiff", "stagefusion"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -55,9 +62,36 @@ def main() -> None:
     if want is None or "autodiff" in want:
         from . import autodiff_overhead
         suites.append(autodiff_overhead.rows)
+    if want is None or "stagefusion" in want:
+        from . import stage_fusion
+        suites.append(stage_fusion.rows)
+    collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():
             print(f"{name},{us:.2f},{derived}")
+            collected.append(
+                {"name": name, "us": round(float(us), 2),
+                 "derived": str(derived)})
+    if args.json:
+        import jax
+        import numpy as np
+        payload = {
+            "metadata": {
+                "argv": sys.argv[1:],
+                "suites": sorted(want) if want is not None else "all",
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+                "numpy": np.__version__,
+                "platform": platform.platform(),
+                "backend": jax.default_backend(),
+            },
+            "rows": collected,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(collected)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -16,10 +16,12 @@ Quick tour::
 """
 from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
                  Seq, Two, seq)
-from .optimize import (fuse, inverse_program, lower, num_perm_stages,
-                       optimize, program_cost)
-from .execute import (CompiledExpr, compile_expr, engines, geom_cache_info,
-                      get_engine, perm_apply, register_engine, run_program)
+from .optimize import (FusedStage, cluster, expand_clusters, fuse,
+                       inverse_program, lower, num_perm_stages, optimize,
+                       program_cost)
+from .execute import (CompiledExpr, clear_caches, compile_expr, engines,
+                      fused_apply, geom_cache_info, get_engine, perm_apply,
+                      register_engine, run_program)
 from . import vocab
 from .sort import compiled_sort, sort_expr
 # NB: the fft *function* stays in .fft to avoid shadowing the submodule
@@ -28,9 +30,10 @@ from .fft import compiled_fft, fft_expr
 
 __all__ = [
     "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
-    "Perm", "Seq", "Two", "seq", "fuse", "inverse_program", "lower",
-    "num_perm_stages", "optimize", "program_cost", "CompiledExpr",
-    "compile_expr", "engines", "geom_cache_info", "get_engine", "perm_apply",
+    "Perm", "Seq", "Two", "seq", "FusedStage", "cluster", "expand_clusters",
+    "fuse", "inverse_program", "lower", "num_perm_stages", "optimize",
+    "program_cost", "CompiledExpr", "clear_caches", "compile_expr",
+    "engines", "fused_apply", "geom_cache_info", "get_engine", "perm_apply",
     "register_engine", "run_program", "vocab", "compiled_sort", "sort_expr",
     "compiled_fft", "fft_expr",
 ]

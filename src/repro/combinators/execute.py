@@ -34,6 +34,22 @@ Batching: ``run_program`` / ``CompiledExpr.__call__`` take
 ``(B, 2^n, d)`` — folded into the kernel grid with the tile plan shared
 across the batch. Injected engines that don't understand ``batched``
 are transparently wrapped with ``jax.vmap`` (the vmap fallback).
+
+Fused stages (DESIGN.md §10): on the "pallas" engine the compiled
+program is additionally run through :func:`repro.combinators.optimize.
+cluster`, which groups ``Perm → compute → Perm`` runs into
+:class:`~repro.combinators.optimize.FusedStage`\\ s. A FusedStage
+dispatches to the double-buffered megakernel — one HBM round trip for
+the whole run, with the interior ``CmpHalves``/``Bfly``/``Map`` stages
+applied to each tile in VMEM. Every other engine (the "ref" oracle,
+injected engines) executes the cluster's original stages one at a time,
+as does the megakernel's backward pass: :func:`fused_apply` is a
+``custom_vjp`` primitive that saves only the input and replays the
+per-stage program under ``jax.vjp`` — ``Perm`` cotangents still ride
+the offline-inverted tiled kernels, compute cotangents the plain jnp
+rules. Clusters whose layout the kernel cannot take (complex dtype,
+non-planar butterflies, arrays too small to tile) transparently fall
+back to stage-at-a-time execution.
 """
 from __future__ import annotations
 
@@ -47,10 +63,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bmmc import Bmmc
+from ..core.tiling import compute_tables, plan_tiled
 from ..kernels import ref as _ref
 from ..kernels.bmmc_permute import plan_geometry, tiled_permute_tables
 from .ir import Bfly, CmpHalves, Expr, Map, Perm
-from .optimize import Program, lower, fuse, inverse_program
+from .optimize import (Program, FusedStage, cluster, lower, fuse,
+                       inverse_program)
 
 EngineFn = Callable[[jax.Array, Bmmc], jax.Array]
 
@@ -82,14 +100,16 @@ def engines() -> tuple:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=512)
-def _geom_executable(geometry: tuple, interpret: bool, batched: bool = False):
-    """One jitted tiled-pass executable per tile geometry. Index tables are
-    arguments, so every stage sharing this geometry reuses the trace. The
-    cache key is independent of the batch size: growing B re-specializes
-    the jit trace but never adds a geometry entry."""
+def _geom_executable(geometry: tuple, interpret: bool, batched: bool = False,
+                     epilogue: tuple = (), map_fns: tuple = ()):
+    """One jitted tiled-pass executable per (tile geometry, epilogue
+    signature). Index/epilogue tables are arguments, so every stage
+    sharing this key reuses the trace. The cache key is independent of
+    the batch size: growing B re-specializes the jit trace but never
+    adds a geometry entry."""
     return jax.jit(functools.partial(
         tiled_permute_tables, geometry=geometry, interpret=interpret,
-        batched=batched))
+        batched=batched, epilogue=epilogue, map_fns=map_fns))
 
 
 def geom_cache_info():
@@ -103,6 +123,11 @@ def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
 
     if bmmc.is_identity_perm():
         return x
+    if jnp.iscomplexobj(x):
+        # pallas TPU has no complex dtype; a permutation is dtype-agnostic,
+        # so complex arrays ride the gather oracle (planar (re, im) float
+        # layouts take the tiled kernels)
+        return _ref.bmmc_ref(x, bmmc, batched=batched)
     plans = ops.dispatch_plans(x, bmmc, t, batched)
     if plans is None:  # too small to tile; whole array fits anywhere
         return _ref.bmmc_ref(x, bmmc, batched=batched)
@@ -114,6 +139,137 @@ def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
 
 register_engine("ref", _ref.bmmc_ref)
 register_engine("pallas", _pallas_engine)
+
+
+# ---------------------------------------------------------------------------
+# Fused-stage execution: the megakernel dispatch path (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _fused_plan_cached(fs: FusedStage, t: int):
+    """(pass plans, per-compute ComputeTables-or-Map entries) for a
+    cluster, or None when the megakernel cannot run it at this tile
+    parameter (a pass not plannable, or a compute not tile-local in the
+    first pass — possible when the runtime ``t`` differs from the
+    clustering ``t``). The composed BMMC runs as 1 tiled pass, or 2 via
+    the §5.2 factorization; computes always ride the FIRST pass's tiles
+    (they are pulled back to input space, where pass 1 reads)."""
+    plans = []
+    for factor in fs.bmmc.factor_tiled(t):
+        plan = plan_tiled(factor, t)
+        if plan is None:
+            return None
+        plans.append(plan)
+    entries = []
+    for comp, prefix in fs.computes:
+        if isinstance(comp, Map):
+            entries.append(("map", comp))
+            continue
+        kind = "cmp" if isinstance(comp, CmpHalves) else "bfly"
+        ct = compute_tables(plans[0], prefix, kind)
+        if ct is None:
+            return None
+        entries.append((kind, comp, ct))
+    return tuple(plans), tuple(entries)
+
+
+@functools.lru_cache(maxsize=64)
+def _w_planar_cached(twiddles: tuple, dtype: str) -> np.ndarray:
+    """The (2^(n-1), 2) resident (re, im) twiddle-value table."""
+    return np.stack([np.asarray([w.real for w in twiddles], dtype=dtype),
+                     np.asarray([w.imag for w in twiddles], dtype=dtype)],
+                    axis=-1)
+
+
+def _fused_tile(x: jax.Array, fs: FusedStage, batched: bool) -> Optional[int]:
+    """The tile parameter the megakernel would use on ``x``, or None when
+    the fused fast path cannot take this input (falls back per-stage)."""
+    from ..kernels import ops
+
+    lead = 1 if batched else 0
+    if x.ndim not in (1 + lead, 2 + lead) or jnp.iscomplexobj(x):
+        return None
+    d = x.shape[1 + lead] if x.ndim == 2 + lead else 1
+    if any(isinstance(c, Bfly) for c, _ in fs.computes):
+        if x.ndim != 2 + lead or d != 2:
+            return None  # butterflies need the planar (re, im) layout
+    t = ops.choose_tile(fs.bmmc.n, x.dtype.itemsize, d)
+    if t is None or _fused_plan_cached(fs, t) is None:
+        return None
+    return t
+
+
+def _fused_pallas(x: jax.Array, fs: FusedStage, t: int, *,
+                  interpret: bool = True, batched: bool = False) -> jax.Array:
+    """Run one cluster as a double-buffered megakernel dispatch: the
+    first tiled pass carries every fused compute as an in-VMEM epilogue;
+    a second plain pass (general BMMCs only, §5.2) finishes the
+    permutation."""
+    plans, entries = _fused_plan_cached(fs, t)
+    plan = plans[0]
+    sig, scal, vmem, map_fns = [], [], [], []
+    for e in entries:
+        if e[0] == "map":
+            sig.append(("map", e[1].name))
+            map_fns.append(e[1].fn)
+            scal.append(())
+            vmem.append(())
+            continue
+        kind, comp, ct = e
+        if kind == "cmp":
+            sig.append(("cmp", ct.vr, ct.vc))
+            scal.append((ct.hi_base,))
+            vmem.append((ct.hi_row, ct.hi_lane))
+        else:
+            w = _w_planar_cached(comp.twiddles, np.dtype(x.dtype).name)
+            sig.append(("bfly", ct.vr, ct.vc, len(comp.twiddles)))
+            scal.append((ct.hi_base, ct.tw_base))
+            vmem.append((ct.hi_row, ct.hi_lane, ct.tw_row, ct.tw_lane, w))
+    run = _geom_executable(plan_geometry(plan), interpret, batched,
+                           tuple(sig), tuple(map_fns))
+    x = run(x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0,
+            epi_scalar=tuple(scal), epi_vmem=tuple(vmem))
+    for plan in plans[1:]:
+        run = _geom_executable(plan_geometry(plan), interpret, batched)
+        x = run(x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0)
+    return x
+
+
+def _fused_forward(x, fs, engine, batched):
+    if engine == "pallas":
+        t = _fused_tile(x, fs, batched)
+        if t is not None:
+            return _fused_pallas(x, fs, t, batched=batched)
+    return run_program(fs.stages, x, engine, batched=batched)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fused_apply(x: jax.Array, fs: FusedStage,
+                engine: Union[str, EngineFn, None] = None,
+                batched: bool = False) -> jax.Array:
+    """Differentiable fused-cluster execution.
+
+    Forward: ONE megakernel pass on the "pallas" engine (per-stage
+    otherwise). Backward: the per-stage program is replayed under
+    ``jax.vjp`` from the saved input — ``Perm`` stages keep their
+    offline-inverted custom VJP (cotangents ride the tiled kernels, and
+    for a permutation-only cluster that is exactly the inverse cluster),
+    compute stages their native jnp rules.
+    """
+    return _fused_forward(x, fs, engine, batched)
+
+
+def _fused_fwd(x, fs, engine, batched):
+    return _fused_forward(x, fs, engine, batched), x
+
+
+def _fused_bwd(fs, engine, batched, x, ct):
+    _, vjp = jax.vjp(
+        lambda v: run_program(fs.stages, v, engine, batched=batched), x)
+    return vjp(ct)
+
+
+fused_apply.defvjp(_fused_fwd, _fused_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +376,8 @@ def run_program(program: Sequence[Expr], x: jax.Array,
     for s in program:
         if isinstance(s, Perm):
             x = perm_apply(x, s.bmmc, engine, batched)
+        elif isinstance(s, FusedStage):
+            x = fused_apply(x, s, engine, batched)
         elif isinstance(s, CmpHalves):
             h = x.shape[axis] // 2
             lo = jax.lax.slice_in_dim(x, 0, h, axis=axis)
@@ -246,6 +404,12 @@ def _lowered_cached(expr: Expr, n: int, optimized: bool) -> Program:
     return fuse(prog) if optimized else prog
 
 
+@functools.lru_cache(maxsize=1024)
+def _clustered_cached(expr: Expr, n: int, optimized: bool,
+                      t: int) -> tuple:
+    return cluster(_lowered_cached(expr, n, optimized), n, t)
+
+
 class CompiledExpr:
     """A callable compiled combinator expression — a first-class JAX value.
 
@@ -267,9 +431,18 @@ class CompiledExpr:
     def program(self, n: int) -> Program:
         return _lowered_cached(self.expr, n, self.optimized)
 
-    def cost(self, n: int, t: int, itemsize: int = 4) -> dict:
+    def clustered_program(self, n: int, t: int) -> tuple:
+        """The program with ``Perm → compute → Perm`` runs grouped into
+        megakernel :class:`FusedStage`\\ s for tile parameter ``t`` —
+        what the "pallas" engine actually executes."""
+        return _clustered_cached(self.expr, n, self.optimized, t)
+
+    def cost(self, n: int, t: int, itemsize: int = 4, *,
+             clustered: bool = False) -> dict:
         from .optimize import program_cost
-        return program_cost(self.program(n), t, itemsize)
+        prog = (self.clustered_program(n, t) if clustered
+                else self.program(n))
+        return program_cost(prog, t, itemsize)
 
     def is_permutation(self, n: int) -> bool:
         """True if the program is pure ``Perm`` stages (hence invertible)."""
@@ -296,10 +469,40 @@ class CompiledExpr:
         if (1 << n) != x.shape[axis]:
             raise ValueError(
                 f"array length {x.shape[axis]} is not a power of 2")
-        return run_program(self.program(n), x, self.engine, batched=batched)
+        prog = self.program(n)
+        if self.engine == "pallas" and self.optimized:
+            # megakernel clustering; the ref oracle and injected engines
+            # stay stage-at-a-time
+            from ..kernels.ops import choose_tile
+            d = x.shape[axis + 1] if x.ndim == axis + 2 else 1
+            t = choose_tile(n, x.dtype.itemsize, d)
+            if t is not None:
+                prog = self.clustered_program(n, t)
+        return run_program(prog, x, self.engine, batched=batched)
 
 
 _COMPILED: Dict[tuple, CompiledExpr] = {}
+
+
+def clear_caches() -> None:
+    """Drop every compiled artifact the executor pins.
+
+    The geometry-executable cache holds jitted pallas executables (each
+    pinning a traced kernel), ``_COMPILED`` grows one entry per
+    ``(expr, engine, optimize)`` triple, and the plan/table caches hold
+    offline numpy tables — none of which is bounded across a long
+    geometry sweep. Test fixtures that iterate many sizes/dtypes call
+    this between sweeps to keep memory flat.
+    """
+    from ..kernels import ops
+
+    _geom_executable.cache_clear()
+    _fused_plan_cached.cache_clear()
+    _w_planar_cached.cache_clear()
+    _lowered_cached.cache_clear()
+    _clustered_cached.cache_clear()
+    _COMPILED.clear()
+    ops._plans_cached.cache_clear()
 
 
 def compile_expr(expr: Expr, *, engine: Union[str, EngineFn] = "pallas",

@@ -23,17 +23,36 @@ tuple of primitive stages (``Perm`` / ``CmpHalves`` / ``Bfly`` / ``Map``):
 Fusion can only ever *merge or drop* ``Perm`` stages, so the optimized
 program never has more permutation stages — and therefore never more
 tiled kernel passes — than the raw lowering (tested property).
+
+``cluster(program, n, t)`` goes one level deeper than ``fuse``: it groups
+``Perm → compute → Perm → …`` runs into :class:`FusedStage` objects that
+a single tiled megakernel pass can execute — the composed permutation is
+applied by the pass's DMA + gather, and each interior compute
+(``CmpHalves`` / ``Bfly`` / ``Map``) runs on the tile while it sits in
+VMEM. A compute is *tile-local* (free to fuse) iff its pairing vector,
+pulled back to input space through the perms preceding it in the run,
+lies in the span of the composed plan's tile row/column bits — then both
+elements of every compare/butterfly pair are resident in the same tile
+and the compute costs zero extra HBM traffic (DESIGN.md §10).
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence, Tuple
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 from ..core.bmmc import Bmmc
 from ..core.parm import parm_matrix
+from ..core.tiling import pairing_vector
 from .ir import (Bfly, CmpHalves, Expr, Id, Ilv, Map, ParmE, Perm, Seq, Two,
                  PRIMITIVES)
 
 Program = Tuple[Expr, ...]  # primitives only
+
+COMPUTES = (CmpHalves, Bfly, Map)
+
+# VMEM budget for a Bfly twiddle-value table held resident by the fused
+# kernel ((2^(n-1), 2) float32); butterflies past this stay unfused.
+_W_TABLE_BYTES = 1 * 1024 * 1024
 
 
 def _lift(stages: Program, n: int) -> Program:
@@ -106,6 +125,147 @@ def optimize(expr: Expr, n: int) -> Program:
     return fuse(lower(expr, n))
 
 
+# ---------------------------------------------------------------------------
+# Fused-stage clustering (the megakernel grouping pass)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedStage:
+    """A ``Perm → compute → … → Perm`` run executable as ONE tiled pass.
+
+    ``stages`` is the original primitive run (the oracle / fallback / VJP
+    replay path executes it stage-at-a-time); ``bmmc`` the composed
+    permutation the megakernel's DMA+gather realizes; ``computes`` the
+    interior compute stages paired with the *prefix* permutation (the
+    composition of the run's perms before them) whose output index space
+    they act in. Hashable, so fused programs can key plan caches.
+    """
+
+    stages: Program
+    bmmc: Bmmc
+    computes: Tuple[Tuple[Expr, Bmmc], ...]
+
+    def size_bits(self) -> int:
+        return self.bmmc.n
+
+
+def _run_fused(stages: Sequence[Expr], n: int) -> FusedStage:
+    """Build the FusedStage for a validated run."""
+    prefix = Bmmc.identity(n)
+    computes: List[tuple] = []
+    for s in stages:
+        if isinstance(s, Perm):
+            prefix = s.bmmc @ prefix
+        else:
+            computes.append((s, prefix))
+    return FusedStage(tuple(stages), prefix, tuple(computes))
+
+
+def _factor_cols(bmmc: Bmmc, t: int) -> Optional[List[list]]:
+    """Witness columns of each tiled pass realizing ``bmmc`` (1 if tiled,
+    2 via the §5.2 UR·RLP factorization), or None if a pass's tile would
+    exceed the array."""
+    n = bmmc.n
+    out = []
+    for factor in bmmc.factor_tiled(t):
+        cols = factor.tiled_columns(t)
+        if cols is None:  # pragma: no cover - §5.2 factors are tiled
+            return None
+        n_over = len(set(cols) & set(range(t)))
+        if n - 2 * t + n_over < 0:
+            return None
+        out.append(cols)
+    return out
+
+
+def _run_valid(stages: Sequence[Expr], n: int, t: int) -> bool:
+    """Can this run execute as one fused megakernel dispatch?
+
+    The composed permutation runs as its tiled passes (1 if tiled for
+    ``t``, else the §5.2 two-pass factorization), and every interior
+    compute must be tile-local *in the first pass* — its pairing vector
+    ``A_M^{-1} e_{n-1}`` (``M`` = prefix perms), pulled back to input
+    space, lies in the span of the first pass's tile row/column bits, so
+    both halves of every pair land in the same VMEM tile. (Computes are
+    applied to the input tile before the first gather — a permutation
+    only moves values, so a compute pulled back through its prefix
+    commutes exactly.) ``Map`` is elementwise and always local; ``Bfly``
+    additionally gates on its resident twiddle table fitting the VMEM
+    budget.
+    """
+    fs = _run_fused(stages, n)
+    all_cols = _factor_cols(fs.bmmc, t)
+    if all_cols is None:
+        return False
+    lr_mask = ((1 << t) - 1)
+    for cpos in all_cols[0]:
+        lr_mask |= 1 << cpos
+    for comp, prefix in fs.computes:
+        if isinstance(comp, Map):
+            continue
+        if isinstance(comp, Bfly):
+            if len(comp.twiddles) * 8 > _W_TABLE_BYTES:
+                return False
+        if pairing_vector(prefix) & ~lr_mask:
+            return False
+    return True
+
+
+def cluster(program: Sequence[Expr], n: int,
+            t: Optional[int]) -> Tuple[Expr, ...]:
+    """Greedily group runs of a fused program into :class:`FusedStage`\\ s.
+
+    Starting at each ``Perm``, the run is extended one stage at a time —
+    or by a ``(compute, Perm)`` pair when the compute only becomes
+    tile-local under the *longer* composition — while :func:`_run_valid`
+    holds. ``t=None`` (array too small to tile) disables clustering.
+    Stages outside any run pass through unchanged, so ``cluster`` is the
+    identity on programs the megakernel cannot speed up.
+    """
+    prog = tuple(program)
+    if t is None:
+        return prog
+    out: List[Expr] = []
+    i = 0
+    while i < len(prog):
+        s = prog[i]
+        if not isinstance(s, Perm):
+            out.append(s)
+            i += 1
+            continue
+        run: List[Expr] = [s]
+        j = i + 1
+        while j < len(prog):
+            if _run_valid(run + [prog[j]], n, t):
+                run.append(prog[j])
+                j += 1
+            elif (isinstance(prog[j], COMPUTES) and j + 1 < len(prog)
+                  and isinstance(prog[j + 1], Perm)
+                  and _run_valid(run + [prog[j], prog[j + 1]], n, t)):
+                run.extend((prog[j], prog[j + 1]))
+                j += 2
+            else:
+                break
+        if len(run) == 1:
+            out.append(s)
+            i += 1
+        else:
+            out.append(_run_fused(run, n))
+            i = j
+    return tuple(out)
+
+
+def expand_clusters(program: Sequence[Expr]) -> Program:
+    """Inverse of :func:`cluster`: replace FusedStages by their stages."""
+    out: List[Expr] = []
+    for s in program:
+        if isinstance(s, FusedStage):
+            out.extend(s.stages)
+        else:
+            out.append(s)
+    return tuple(out)
+
+
 def inverse_program(program: Sequence[Expr]) -> Program:
     """The exact inverse of a permutation-only program: stages reversed,
     each BMMC replaced by its offline F2 inverse.
@@ -133,27 +293,61 @@ def num_perm_stages(program: Iterable[Expr]) -> int:
 
 
 def program_cost(program: Sequence[Expr], t: int, itemsize: int = 4) -> dict:
-    """Offline cost report: tiled passes + DMA descriptors (transaction model).
+    """Offline cost report: HBM round trips + DMA descriptors.
 
-    ``t`` is the tile parameter of the executing kernel; each ``Perm``
-    contributes 1 pass if tiled, else 2 (paper §5.2). Descriptor counts
-    come from :func:`repro.kernels.ops.modeled_transactions`.
+    ``t`` is the tile parameter of the executing kernel. Each ``Perm``
+    contributes its tiled passes (1 if tiled, else 2 — paper §5.2); each
+    :class:`FusedStage` exactly ONE pass regardless of how many stages it
+    swallowed (that is the megakernel's whole point); each *standalone*
+    compute stage one full elementwise sweep (read + write of the array —
+    what the per-stage jnp path pays). ``round_trips`` totals them;
+    ``round_trips_unfused`` is the same program with every cluster
+    expanded, so ``round_trips_saved`` is the megakernel's win as seen by
+    the transaction model.
     """
     from ..kernels.ops import modeled_transactions
 
-    perms = [s for s in program if isinstance(s, Perm)]
+    prog = tuple(program)
+    n = None
+    for s in prog:
+        if isinstance(s, (Perm, FusedStage)):
+            n = s.bmmc.n
+            break
     passes = 0
     descriptors = 0
     bytes_moved = 0
-    for s in perms:
-        tx = modeled_transactions(s.bmmc, t, itemsize)
-        passes += tx["passes"]
-        descriptors += tx["descriptors"]
-        bytes_moved += tx["bytes_moved"]
-    return {
-        "stages": len(tuple(program)),
-        "perm_stages": len(perms),
+    round_trips = 0
+    compute_sweeps = 0
+    fused_stages = 0
+    for s in prog:
+        if isinstance(s, (Perm, FusedStage)):
+            tx = modeled_transactions(s.bmmc, t, itemsize)
+            passes += tx["passes"]
+            round_trips += tx["passes"]
+            descriptors += tx["descriptors"]
+            bytes_moved += tx["bytes_moved"]
+            if isinstance(s, FusedStage):
+                fused_stages += 1
+        else:  # standalone compute: one full elementwise sweep over HBM
+            compute_sweeps += 1
+            round_trips += 1
+            if n is not None:
+                teff = min(t, n)
+                descriptors += 2 * (1 << (n - teff))
+                bytes_moved += 2 * (1 << n) * itemsize
+    cost = {
+        "stages": len(prog),
+        "perm_stages": num_perm_stages(prog),
+        "fused_stages": fused_stages,
+        "compute_sweeps": compute_sweeps,
         "tiled_passes": passes,
         "descriptors": descriptors,
         "bytes_moved": bytes_moved,
+        "round_trips": round_trips,
     }
+    if fused_stages:
+        unfused = program_cost(expand_clusters(prog), t, itemsize)
+        cost["round_trips_unfused"] = unfused["round_trips"]
+        cost["round_trips_saved"] = (unfused["round_trips"]
+                                     - cost["round_trips"])
+    return cost

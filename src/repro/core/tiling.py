@@ -176,6 +176,95 @@ def plan_tiled(bmmc: Bmmc, t: int) -> Optional[TilePlan]:
     )
 
 
+# ---------------------------------------------------------------------------
+# Fused-compute tables: everything a megakernel epilogue needs to run a
+# CmpHalves / Bfly stage on the tile while it sits in VMEM (DESIGN.md §10).
+#
+# The compute pairs intermediate index m with m ^ 2^(n-1), where m = M x
+# (+) c_M and M is the composition of the run's perms *before* the
+# compute. Pulled back to input space the partner of x is x ^ v with
+# v = A_M^-1 e_{n-1}; when v lies in the span of the plan's tile row (R)
+# and column (L) bits, the partner is resident in the same tile at
+# position (r ^ vr, lane ^ vc). Which element of a pair is the "hi" half
+# (bit n-1 of m set) and which twiddle a butterfly pair uses are affine
+# in x, so they split into tiny per-row / per-lane tables XORed with one
+# per-tile scalar — the same trick as `xor_low`.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ComputeTables:
+    """Offline tables for one in-VMEM compute applied inside a tiled pass."""
+
+    kind: str                        # "cmp" | "bfly"
+    vr: int                          # partner XOR on the tile-row slot
+    vc: int                          # partner XOR on the lane
+    hi_row: np.ndarray               # (rows_per_tile,) int32 parity bits
+    hi_lane: np.ndarray              # (row_len,) int32 parity bits
+    hi_base: np.ndarray              # (n_tiles,) int32 per-tile parity bit
+    tw_row: Optional[np.ndarray] = None    # (rows_per_tile,) int32 (bfly)
+    tw_lane: Optional[np.ndarray] = None   # (row_len,) int32 (bfly)
+    tw_base: Optional[np.ndarray] = None   # (n_tiles,) int32 (bfly)
+
+
+def pairing_vector(prefix: Bmmc) -> int:
+    """The input-space partner XOR ``v = A_M^{-1} e_{n-1}`` of a compute
+    whose pair bit is n-1 in the output space of ``prefix``."""
+    return f2.matvec(f2.inverse(prefix.rows), 1 << (prefix.n - 1))
+
+
+def compute_tables(plan: TilePlan, prefix: Bmmc,
+                   kind: str) -> Optional[ComputeTables]:
+    """Build the epilogue tables for one compute, or None if the compute
+    is not tile-local under ``plan`` (pairing vector escapes L ∪ R)."""
+    n, t = plan.n, plan.t
+    low = set(range(t))
+    r_set = set(plan.row_cols)
+    r_not_l = sorted(r_set - low)
+    tb = list(plan.tb_positions)
+    low_mask = (1 << t) - 1
+    lr_mask = low_mask
+    for pos in plan.row_cols:
+        lr_mask |= 1 << pos
+
+    v = pairing_vector(prefix)
+    if v & ~lr_mask:
+        return None
+    vr = _gather_bits(v, r_not_l)
+    vc = v & low_mask
+
+    rowvec = prefix.rows[n - 1]            # row n-1 of A_M: hi(x) predicate
+    cbit = (prefix.c >> (n - 1)) & 1
+    rpt, row_len, n_tiles = plan.rows_per_tile, plan.row_len, plan.n_tiles
+
+    hi_row = np.fromiter(
+        (f2.parity(rowvec & _scatter_bits(r, r_not_l)) for r in range(rpt)),
+        dtype=np.int32, count=rpt)
+    hi_lane = np.fromiter(
+        (f2.parity(rowvec & c) for c in range(row_len)),
+        dtype=np.int32, count=row_len)
+    hi_base = np.fromiter(
+        (f2.parity(rowvec & _scatter_bits(g, tb)) ^ cbit
+         for g in range(n_tiles)),
+        dtype=np.int32, count=n_tiles)
+
+    tw_row = tw_lane = tw_base = None
+    if kind == "bfly":
+        twmask = (1 << (n - 1)) - 1        # pair index: m with bit n-1 dropped
+        tw_row = np.fromiter(
+            (f2.matvec(prefix.rows, _scatter_bits(r, r_not_l)) & twmask
+             for r in range(rpt)), dtype=np.int32, count=rpt)
+        tw_lane = np.fromiter(
+            (f2.matvec(prefix.rows, c) & twmask for c in range(row_len)),
+            dtype=np.int32, count=row_len)
+        tw_base = np.fromiter(
+            ((f2.matvec(prefix.rows, _scatter_bits(g, tb)) ^ prefix.c)
+             & twmask for g in range(n_tiles)),
+            dtype=np.int32, count=n_tiles)
+    return ComputeTables(kind=kind, vr=vr, vc=vc, hi_row=hi_row,
+                         hi_lane=hi_lane, hi_base=hi_base, tw_row=tw_row,
+                         tw_lane=tw_lane, tw_base=tw_base)
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanStats:
     """Analytic plan statistics — O(n^2) bit math, no table enumeration.

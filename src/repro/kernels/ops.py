@@ -24,17 +24,19 @@ from ..core.tiling import TilePlan, plan_bmmc, plan_tiled
 from . import ref as _ref
 from .bmmc_permute import tiled_permute
 
-# VMEM working-set budget for one tile buffer (two buffers are held; v5e has
-# 16 MiB VMEM, leave headroom for the gather table + pipeline).
-_VMEM_TILE_BYTES = 4 * 1024 * 1024
+# VMEM working-set budget for one tile buffer. The double-buffered pipeline
+# holds 2 * num_buffers tile-sized slots (in + out, default num_buffers=2);
+# v5e has 16 MiB VMEM, leave headroom for the gather table + epilogue tables.
+_VMEM_TILE_BYTES = 2 * 1024 * 1024
 _MAX_T = 12
 
 
 def choose_tile(n: int, itemsize: int, d: int = 1, t: Optional[int] = None) -> Optional[int]:
     """Pick n_tile: the LARGEST t whose worst-case (2^t x 2^t) tile fits the
-    VMEM budget (perf iteration: kernel-hillclimb #1 — descriptor-issue, not
-    bandwidth, bounds scattered-bit permutations, and descriptors fall 4x
-    per +1 of t; the paper's warp-sized t=5 is far off the TPU optimum).
+    per-buffer VMEM budget (perf iteration: kernel-hillclimb #1 —
+    descriptor-issue, not bandwidth, bounds scattered-bit permutations, and
+    descriptors fall 4x per +1 of t; the paper's warp-sized t=5 is far off
+    the TPU optimum).
 
     Returns None if the array is too small to be worth tiling (fallback to
     the reference gather — the whole array fits in VMEM anyway).

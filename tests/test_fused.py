@@ -1,0 +1,284 @@
+"""Fused-stage megakernel tests (DESIGN.md §10).
+
+Pins the four contracts of the fused execution pipeline:
+
+* ``cluster()`` is lossless (expanding clusters recovers the program)
+  and, per the transaction model, saves >= 2x HBM round trips on the
+  acceptance workloads (2^12 sort and FFT).
+* Fused-cluster outputs are BIT-IDENTICAL to per-stage ref execution
+  for permutation/compare/map clusters across dtypes x trailing dims x
+  batch sizes (a compare-exchange moves values without arithmetic).
+  Butterfly clusters are linear algebra in float — identical operation
+  DAG, but XLA may fuse differently — so they pin to a few-ulp bound.
+* ``jax.grad`` through a fused sort still matches the per-stage ref
+  grad and the argsort oracle (fused_apply's save-x + per-stage-replay
+  VJP).
+* ``CompiledExpr.inverse`` round-trips through the PALLAS engine, not
+  just the vjp oracle.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.combinators import (FusedStage, clear_caches, cluster,
+                               compile_expr, expand_clusters, geom_cache_info,
+                               program_cost, run_program, vocab as V)
+from repro.combinators.fft import compiled_fft, fft_expr, to_planar
+from repro.combinators.optimize import optimize
+from repro.combinators.sort import compiled_sort, sort_expr
+from repro.core.bmmc import Bmmc
+from repro.kernels.ops import choose_tile
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_caches():
+    """This module sweeps many (n, dtype, tail, batch) geometries; drop
+    the pinned jitted executables when done (ISSUE 4 satellite)."""
+    yield
+    clear_caches()
+
+
+def _payload(shape, dtype, seed):
+    vals = np.random.default_rng(seed).integers(0, 1 << 16, shape)
+    return jnp.asarray(vals).astype(dtype)
+
+
+def _assert_bitwise(got, want, ctx):
+    assert got.dtype == want.dtype, ctx
+    assert np.array_equal(np.asarray(got).view(np.uint8),
+                          np.asarray(want).view(np.uint8)), ctx
+
+
+# ---------------------------------------------------------------------------
+# cluster(): structure + transaction model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("name,mk", [("sort", sort_expr), ("fft", fft_expr)])
+def test_cluster_lossless_and_2x_round_trips(name, mk):
+    """ISSUE 4 acceptance: clustering is a pure regrouping, and the fused
+    2^12 sort/FFT cost >= 2x fewer HBM round trips in the model."""
+    n = 12
+    prog = optimize(mk(n), n)
+    t = choose_tile(n, 4, 2 if name == "fft" else 1)
+    clustered = cluster(prog, n, t)
+    assert expand_clusters(clustered) == prog
+    assert any(isinstance(s, FusedStage) for s in clustered)
+    c0 = program_cost(prog, t)
+    c1 = program_cost(clustered, t)
+    assert c1["round_trips"] * 2 <= c0["round_trips"], (name, c0, c1)
+    assert c1["round_trips_unfused"] == c0["round_trips"]
+    assert c1["round_trips_saved"] == c0["round_trips"] - c1["round_trips"]
+    assert c1["bytes_moved"] < c0["bytes_moved"]
+
+
+@pytest.mark.tier1
+def test_cluster_composition_consistency():
+    """Each FusedStage composes exactly the perms it swallowed, and each
+    compute's prefix is the composition of the perms before it."""
+    n = 8
+    prog = optimize(sort_expr(n), n)
+    for s in cluster(prog, n, choose_tile(n, 4, 1)):
+        if not isinstance(s, FusedStage):
+            continue
+        acc = Bmmc.identity(n)
+        ci = 0
+        for stage in s.stages:
+            if hasattr(stage, "bmmc"):
+                acc = stage.bmmc @ acc
+            else:
+                assert s.computes[ci][0] is stage
+                assert s.computes[ci][1] == acc
+                ci += 1
+        assert acc == s.bmmc
+        assert ci == len(s.computes)
+
+
+@pytest.mark.tier1
+def test_cluster_none_tile_is_identity():
+    n = 6
+    prog = optimize(sort_expr(n), n)
+    assert cluster(prog, n, None) == prog
+
+
+# ---------------------------------------------------------------------------
+# Parity fuzz: fused pallas vs per-stage ref, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+@pytest.mark.parametrize("tail", [(), (3,)])
+def test_fused_sort_parity_dtypes_tails(dtype, tail):
+    n = 6
+    f_pal = compiled_sort(n, engine="pallas")
+    f_ref = compiled_sort(n, engine="ref")
+    t = choose_tile(n, jnp.dtype(dtype).itemsize, tail[0] if tail else 1)
+    assert any(isinstance(s, FusedStage)
+               for s in f_pal.clustered_program(n, t)), "megakernel unused"
+    x = _payload((1 << n,) + tail, dtype, seed=hash((str(dtype), tail)) % 997)
+    got, want = f_pal(x), f_ref(x)
+    _assert_bitwise(got, want, (dtype, tail))
+    if not tail and dtype != jnp.bfloat16:
+        assert np.array_equal(np.sort(np.asarray(x)), np.asarray(got))
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("bsz", [1, 3])
+def test_fused_sort_parity_batched(bsz):
+    n = 7
+    f_pal = compiled_sort(n, engine="pallas")
+    f_ref = compiled_sort(n, engine="ref")
+    x = _payload((bsz, 1 << n), jnp.float32, seed=bsz)
+    _assert_bitwise(f_pal(x, batched=True), f_ref(x, batched=True), bsz)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", range(4))
+def test_fused_mixed_program_fuzz(seed):
+    """Random perm/compare/map programs: clustered pallas == per-stage
+    ref, bitwise, across dtype x tail x batch drawn per seed."""
+    rng = random.Random(seed)
+    n = rng.choice([6, 7])
+    parts = [V.perm(Bmmc.random_bpc(n, rng))]
+    for _ in range(rng.choice([2, 3])):
+        parts.append(V.cmp_halves())
+        parts.append(V.perm(Bmmc.random_bpc(n, rng)
+                            if rng.random() < 0.7
+                            else Bmmc.random(n, rng)))
+    if rng.random() < 0.5:
+        parts.insert(2, V.emap("x2", lambda v: v * 2))
+    e = V.seq(*parts)
+    dtype = [jnp.float32, jnp.int32, jnp.bfloat16][seed % 3]
+    tail = [(), (2,)][seed % 2]
+    batched = seed % 2 == 1
+    shape = ((2,) if batched else ()) + (1 << n,) + tail
+    x = _payload(shape, dtype, seed)
+    f_pal = compile_expr(e, engine="pallas")
+    f_ref = compile_expr(e, engine="ref")
+    got = f_pal(x, batched=batched)
+    want = f_ref(x, batched=batched)
+    _assert_bitwise(got, want, (seed, n, dtype, tail, batched))
+
+
+@pytest.mark.tier1
+def test_fused_fft_parity_ulp():
+    """Butterfly clusters: same value DAG, so pallas matches ref to a few
+    float32 ulp (XLA fusion may differ; bit-identity is not guaranteed
+    for float multiply-adds)."""
+    n = 7
+    rng = np.random.default_rng(3)
+    z = (rng.normal(size=1 << n) + 1j * rng.normal(size=1 << n))
+    x = to_planar(z.astype(np.complex64))
+    f_pal = compiled_fft(n, engine="pallas")
+    t = choose_tile(n, 4, 2)
+    assert any(isinstance(s, FusedStage)
+               for s in f_pal.clustered_program(n, t)), "megakernel unused"
+    got = np.asarray(f_pal(x))
+    want = np.asarray(compiled_fft(n, engine="ref")(x))
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+    # and the fused pipeline is still a correct FFT
+    full = got[..., 0] + 1j * got[..., 1]
+    assert np.allclose(full, np.fft.fft(z), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.tier1
+def test_fused_complex_dtype_falls_back_per_stage():
+    """Complex arrays can't enter the megakernel (pallas TPU has no
+    complex dtype); the cluster transparently replays per-stage."""
+    n = 6
+    z = jnp.asarray(np.random.default_rng(4).normal(size=1 << n)
+                    + 1j * np.random.default_rng(5).normal(size=1 << n),
+                    jnp.complex64)
+    got = np.asarray(compiled_fft(n, engine="pallas")(z))
+    want = np.asarray(compiled_fft(n, engine="ref")(z))
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Inverse round-trip through the pallas engine (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_inverse_roundtrip_through_pallas_engine():
+    n = 8
+    rng = random.Random(9)
+    e = (V.bit_reverse(n) >> V.perm(Bmmc.random(n, rng)) >> V.riffle(n)
+         >> V.perm(Bmmc.random_bpc(n, rng)))
+    f = compile_expr(e, engine="pallas")
+    finv = f.inverse(n)
+    assert finv.engine == "pallas"
+    x = _payload((1 << n,), jnp.float32, 9)
+    _assert_bitwise(finv(f(x)), x, "unbatched roundtrip")
+    xb = _payload((3, 1 << n), jnp.int32, 10)
+    _assert_bitwise(finv(f(xb, batched=True), batched=True), xb,
+                    "batched roundtrip")
+
+
+# ---------------------------------------------------------------------------
+# Autodiff through fused clusters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_grad_through_fused_sort_matches_oracle():
+    """ISSUE 4 acceptance: jax.grad through a fused (megakernel) sort ==
+    per-stage ref grad == the argsort oracle."""
+    n = 6
+    x = jnp.asarray(np.random.default_rng(11).normal(
+        size=1 << n).astype(np.float32))
+    w = jnp.asarray(np.random.default_rng(12).normal(
+        size=1 << n).astype(np.float32))
+    grads = {}
+    for engine in ("ref", "pallas"):
+        f = compiled_sort(n, engine=engine)
+        grads[engine] = np.asarray(
+            jax.grad(lambda v: jnp.sum(w * f(v)))(x))
+    assert np.allclose(grads["pallas"], grads["ref"], atol=1e-6)
+    order = np.argsort(np.asarray(x), kind="stable")
+    want = np.empty_like(np.asarray(w))
+    want[order] = np.asarray(w)
+    assert np.allclose(grads["ref"], want, atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_batched_grad_through_fused_sort():
+    n = 6
+    xb = _payload((3, 1 << n), jnp.float32, 21).astype(jnp.float32)
+    w = _payload((3, 1 << n), jnp.float32, 22).astype(jnp.float32)
+    grads = {}
+    for engine in ("ref", "pallas"):
+        f = compiled_sort(n, engine=engine)
+        grads[engine] = np.asarray(jax.grad(
+            lambda v: jnp.sum(w * f(v, batched=True)))(xb))
+    assert np.allclose(grads["pallas"], grads["ref"], atol=1e-6)
+
+
+@pytest.mark.tier1
+def test_grad_through_fused_fft_matches_ref():
+    n = 6
+    rng = np.random.default_rng(13)
+    x = to_planar((rng.normal(size=1 << n)
+                   + 1j * rng.normal(size=1 << n)).astype(np.complex64))
+    w = jnp.asarray(rng.normal(size=(1 << n, 2)).astype(np.float32))
+    grads = {}
+    for engine in ("ref", "pallas"):
+        f = compiled_fft(n, engine=engine)
+        grads[engine] = np.asarray(
+            jax.grad(lambda v: jnp.sum(w * f(v)))(x))
+    assert np.allclose(grads["pallas"], grads["ref"], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cache hygiene
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_clear_caches_drops_executables():
+    n = 6
+    f = compile_expr(V.riffle(n) >> V.bit_reverse(n), engine="pallas")
+    f(_payload((1 << n,), jnp.float32, 0))
+    assert geom_cache_info().currsize > 0
+    clear_caches()
+    assert geom_cache_info().currsize == 0
