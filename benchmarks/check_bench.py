@@ -1,0 +1,118 @@
+"""Benchmark regression gate: compare a fresh ``--smoke --json`` run
+against a checked-in ``BENCH_*.json`` baseline.
+
+Usage: ``python -m benchmarks.check_bench BASELINE.json CURRENT.json``
+
+Fails (exit 1) when the *model* numbers regress — these are offline
+transaction counts, fully deterministic, so any increase is a real code
+regression, not noise:
+
+* ``stagefusion/*/model`` and ``classdispatch/*/program`` rows: the
+  clustered model ``round_trips`` must not exceed the baseline's;
+* ``classdispatch/*/program`` rows: per-class kernel counts must not
+  shift toward costlier classes (``sweep`` and ``general2`` counts must
+  not grow);
+* ``classdispatch/*/model`` rows: the dispatched kernel class and its
+  roofline ratio must not regress.
+
+Wall-clock rows are reported but never gated (CI machines are noisy).
+Rows missing from the baseline (older recordings) are skipped with a
+note, so the gate tightens automatically as baselines are refreshed.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def _derived(row: dict) -> dict:
+    out = {}
+    for part in row.get("derived", "").split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def _round_trips(row: dict):
+    val = _derived(row).get("round_trips")
+    if val is None:
+        return None
+    m = re.match(r"(?:\d+->)?(\d+)$", val)
+    return int(m.group(1)) if m else None
+
+
+def _rows_by_name(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def check(baseline: dict, current: dict) -> list:
+    base = _rows_by_name(baseline)
+    cur = _rows_by_name(current)
+    failures = []
+    skipped = []
+    # a gated row that vanishes from the fresh run is itself a failure —
+    # otherwise a renamed/dropped benchmark silently un-gates its numbers
+    for name in sorted(base):
+        if ((name.endswith("/model") or name.endswith("/program"))
+                and name not in cur):
+            failures.append(f"{name}: gated row missing from current run")
+    for name, row in sorted(cur.items()):
+        if not (name.endswith("/model") or name.endswith("/program")):
+            continue
+        if name not in base:
+            skipped.append(name)
+            continue
+        brow = base[name]
+        b_rt, c_rt = _round_trips(brow), _round_trips(row)
+        if b_rt is not None and c_rt is not None and c_rt > b_rt:
+            failures.append(
+                f"{name}: round_trips {b_rt} -> {c_rt} (regression)")
+        bd, cd = _derived(brow), _derived(row)
+        for key in ("sweep", "general2"):
+            bv, cv = int(bd.get(key, 0) or 0), int(cd.get(key, 0) or 0)
+            if cv > bv:
+                failures.append(
+                    f"{name}: kernel class {key!r} count {bv} -> {cv} "
+                    "(shifted toward a costlier class)")
+        if "kernel" in bd and "kernel" in cd:
+            # directional: only a shift toward a COSTLIER kernel class
+            # fails (an upgrade, e.g. general2 -> general, is progress)
+            rank = {"none": 0, "block": 1, "lane": 1, "tiled": 2,
+                    "general": 2, "fused": 2, "general2": 3}
+            b_rank = rank.get(bd["kernel"], 3)
+            c_rank = rank.get(cd["kernel"], 3)
+            if c_rank > b_rank:
+                failures.append(f"{name}: dispatched kernel "
+                                f"{bd['kernel']} -> {cd['kernel']}")
+        if "roofline" in bd and "roofline" in cd:
+            if float(cd["roofline"]) < float(bd["roofline"]) - 1e-9:
+                failures.append(
+                    f"{name}: roofline {bd['roofline']} -> {cd['roofline']}")
+    for name in skipped:
+        print(f"note: {name} absent from baseline; skipped", file=sys.stderr)
+    return failures
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        current = json.load(f)
+    failures = check(baseline, current)
+    if failures:
+        print("benchmark model regressions vs "
+              f"{sys.argv[1]}:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"benchmark model numbers hold vs {sys.argv[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

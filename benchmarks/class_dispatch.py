@@ -1,0 +1,112 @@
+"""Class-dispatch kernel hierarchy: per-class model + dispatch overhead.
+
+Three views (DESIGN.md §11):
+
+* **Per-class transaction model** — for a representative BMMC of each
+  class, the dispatched kernel, pass count, DMA descriptors and the
+  copy-roofline ratio. The acceptance bar: the block-permute plan's
+  descriptor count EQUALS ``copy_through_vmem``'s for the same size
+  (ratio 1.0), and a general BMMC runs ONE generalized pass, not the
+  §5.2 two.
+* **Program model** — per-class kernel counts + model round trips of
+  the clustered+folded 2^12 sort / FFT (the stagefusion acceptance
+  numbers, now with class dispatch and free folding).
+* **Dispatch microbenchmark** — µs/call of the whole-program compiled
+  executable vs stage-at-a-time Python dispatch for a many-stage
+  program. Both paths execute identical kernels; the gap is pure
+  host-side per-call overhead (plan-cache lookups, table conversion,
+  one XLA dispatch per stage), which the executable pays only at trace
+  time.
+"""
+from __future__ import annotations
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.combinators import compile_expr
+from repro.combinators.sort import sort_expr
+from repro.core.bmmc import Bmmc
+from repro.core.tiling import class_stats
+from repro.kernels.ops import choose_tile
+
+REPS = 20
+
+
+def _class_examples(n: int, t: int):
+    rng = random.Random(0)
+    ident = tuple(1 << i for i in range(n))
+    # block: permute + complement only the bits above the copy block
+    # (2^11 elements), so whole copy-sized blocks move wholesale and the
+    # planned descriptor count EQUALS copy_through_vmem's (ratio 1.0)
+    kb = 11
+    sub = Bmmc.random(n - kb, rng)
+    block = Bmmc(ident[:kb] + tuple(r << kb for r in sub.rows),
+                 sub.c << kb)
+    # lane: permute the low t bits only
+    subl = Bmmc.random(t, rng)
+    lane = Bmmc(tuple(subl.rows) + ident[t:], subl.c)
+    return (
+        ("identity", Bmmc.identity(n)),
+        ("complement", Bmmc.reverse_array(n)),
+        ("block", block),
+        ("lane", lane),
+        ("tiled", Bmmc.bit_reverse(n)),
+        ("general", Bmmc.random(n, rng)),
+    )
+
+
+def rows():
+    out = []
+    n = 13
+    t = choose_tile(n, 4, 1)
+    for name, bmmc in _class_examples(n, t):
+        cs = class_stats(bmmc, t)
+        out.append((
+            f"classdispatch/{name}/2^{n}/model", 0.0,
+            f"t={t};kernel={cs['kernel']};passes={cs['passes']};"
+            f"desc={cs['descriptors']};copy_desc={cs['copy_descriptors']};"
+            f"roofline={cs['roofline_ratio']:.3f}",
+        ))
+
+    # -- program-level per-class kernel counts (the acceptance numbers) -----
+    for name, d in (("sort", 1), ("fft", 2)):
+        from repro.combinators.fft import fft_expr
+        mk = sort_expr if name == "sort" else fft_expr
+        pn = 12
+        pt = choose_tile(pn, 4, d)
+        f = compile_expr(mk(pn), engine="pallas")
+        cost = f.cost(pn, pt, clustered=True)
+        kern = ";".join(f"{k}={v}" for k, v in sorted(cost["kernels"].items()))
+        out.append((
+            f"classdispatch/{name}/2^{pn}/program", 0.0,
+            f"t={pt};round_trips={cost['round_trips']};{kern};"
+            f"roofline={cost['roofline_ratio']:.3f}",
+        ))
+
+    # -- dispatch-overhead microbenchmark -----------------------------------
+    from .autodiff_overhead import _timed  # shared min-stat methodology
+
+    dn = 8
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1 << dn,)).astype(np.float32))
+    f = compile_expr(sort_expr(dn), engine="pallas")
+    jax.block_until_ready(f(x))              # warm the program executable
+    jax.block_until_ready(f.call_per_stage(x))   # and the per-stage path
+    us_exec = _timed(f, x, reps=REPS)
+    us_stage = _timed(f.call_per_stage, x, reps=REPS)
+    stages = len(f.clustered_program(dn, choose_tile(dn, 4, 1)))
+    out.append((f"classdispatch/sort/2^{dn}/perstage_dispatch", us_stage,
+                f"stages={stages}"))
+    out.append((
+        f"classdispatch/sort/2^{dn}/executable_dispatch", us_exec,
+        f"stages={stages};speedup={us_stage / max(us_exec, 1e-9):.2f}x",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(v) for v in r))

@@ -22,11 +22,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
                          "fig9,fig10,transpose,sort,khc,roofline,"
-                         "combinators,autodiff,stagefusion")
+                         "combinators,autodiff,stagefusion,classdispatch")
     ap.add_argument("--smoke", action="store_true",
                     help="fast sanity subset (combinators + autodiff + "
-                         "stagefusion; pairs with `pytest -m tier1` as the "
-                         "quick tier-1 smoke entry point)")
+                         "stagefusion + classdispatch; pairs with `pytest "
+                         "-m tier1` as the quick tier-1 smoke entry point)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows + metadata as JSON")
     args = ap.parse_args()
@@ -34,7 +34,7 @@ def main() -> None:
         ap.error("--smoke and --only are mutually exclusive")
     want = set(args.only.split(",")) if args.only else None
     if args.smoke:
-        want = {"combinators", "autodiff", "stagefusion"}
+        want = {"combinators", "autodiff", "stagefusion", "classdispatch"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -65,6 +65,9 @@ def main() -> None:
     if want is None or "stagefusion" in want:
         from . import stage_fusion
         suites.append(stage_fusion.rows)
+    if want is None or "classdispatch" in want:
+        from . import class_dispatch
+        suites.append(class_dispatch.rows)
     collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():

@@ -16,12 +16,12 @@ Quick tour::
 """
 from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
                  Seq, Two, seq)
-from .optimize import (FusedStage, cluster, expand_clusters, fuse,
+from .optimize import (FusedStage, cluster, expand_clusters, fold_free, fuse,
                        inverse_program, lower, num_perm_stages, optimize,
                        program_cost)
 from .execute import (CompiledExpr, clear_caches, compile_expr, engines,
                       fused_apply, geom_cache_info, get_engine, perm_apply,
-                      register_engine, run_program)
+                      program_cache_info, register_engine, run_program)
 from . import vocab
 from .sort import compiled_sort, sort_expr
 # NB: the fft *function* stays in .fft to avoid shadowing the submodule
@@ -31,9 +31,10 @@ from .fft import compiled_fft, fft_expr
 __all__ = [
     "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
     "Perm", "Seq", "Two", "seq", "FusedStage", "cluster", "expand_clusters",
-    "fuse", "inverse_program", "lower", "num_perm_stages", "optimize",
-    "program_cost", "CompiledExpr", "clear_caches", "compile_expr",
-    "engines", "fused_apply", "geom_cache_info", "get_engine", "perm_apply",
-    "register_engine", "run_program", "vocab", "compiled_sort", "sort_expr",
+    "fold_free", "fuse", "inverse_program", "lower", "num_perm_stages",
+    "optimize", "program_cost", "CompiledExpr", "clear_caches",
+    "compile_expr", "engines", "fused_apply", "geom_cache_info",
+    "get_engine", "perm_apply", "program_cache_info", "register_engine",
+    "run_program", "vocab", "compiled_sort", "sort_expr",
     "compiled_fft", "fft_expr",
 ]

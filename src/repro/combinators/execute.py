@@ -63,11 +63,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bmmc import Bmmc
-from ..core.tiling import compute_tables, plan_tiled
+from ..core.tiling import compute_tables, plan_bmmc, plan_general
 from ..kernels import ref as _ref
-from ..kernels.bmmc_permute import plan_geometry, tiled_permute_tables
+from ..kernels.bmmc_permute import (block_geometry, block_permute_tables,
+                                    lane_geometry, lane_permute_tables,
+                                    plan_geometry, tiled_permute_tables)
 from .ir import Bfly, CmpHalves, Expr, Map, Perm
-from .optimize import (Program, FusedStage, cluster, lower, fuse,
+from .optimize import (Program, FusedStage, cluster, fold_free, lower, fuse,
                        inverse_program)
 
 EngineFn = Callable[[jax.Array, Bmmc], jax.Array]
@@ -117,6 +119,26 @@ def geom_cache_info():
     return _geom_executable.cache_info()
 
 
+@functools.lru_cache(maxsize=256)
+def _block_executable(geometry: tuple, interpret: bool,
+                      batched: bool = False):
+    """One jitted block-permute (grid-remapped DMA copy) executable per
+    geometry; the source-row table is a runtime argument."""
+    return jax.jit(functools.partial(
+        block_permute_tables, geometry=geometry, interpret=interpret,
+        batched=batched))
+
+
+@functools.lru_cache(maxsize=256)
+def _lane_executable(geometry: tuple, interpret: bool,
+                     batched: bool = False):
+    """One jitted lane-permute (in-VMEM row gather) executable per
+    geometry; the lane table is a runtime argument."""
+    return jax.jit(functools.partial(
+        lane_permute_tables, geometry=geometry, interpret=interpret,
+        batched=batched))
+
+
 def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
                    interpret: bool = True, batched: bool = False) -> jax.Array:
     from ..kernels import ops
@@ -128,10 +150,19 @@ def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
         # so complex arrays ride the gather oracle (planar (re, im) float
         # layouts take the tiled kernels)
         return _ref.bmmc_ref(x, bmmc, batched=batched)
-    plans = ops.dispatch_plans(x, bmmc, t, batched)
-    if plans is None:  # too small to tile; whole array fits anywhere
+    got = ops.class_dispatch(x, bmmc, t, batched)
+    if got is None:  # too small to tile; whole array fits anywhere
         return _ref.bmmc_ref(x, bmmc, batched=batched)
-    for plan in plans:
+    kernel, payload = got
+    if kernel == "none":
+        return x
+    if kernel == "block":
+        run = _block_executable(block_geometry(payload), interpret, batched)
+        return run(x, payload.src_rows)
+    if kernel == "lane":
+        run = _lane_executable(lane_geometry(payload), interpret, batched)
+        return run(x, payload.src_lane)
+    for plan in payload:
         run = _geom_executable(plan_geometry(plan), interpret, batched)
         x = run(x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0)
     return x
@@ -145,23 +176,9 @@ register_engine("pallas", _pallas_engine)
 # Fused-stage execution: the megakernel dispatch path (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=256)
-def _fused_plan_cached(fs: FusedStage, t: int):
-    """(pass plans, per-compute ComputeTables-or-Map entries) for a
-    cluster, or None when the megakernel cannot run it at this tile
-    parameter (a pass not plannable, or a compute not tile-local in the
-    first pass — possible when the runtime ``t`` differs from the
-    clustering ``t``). The composed BMMC runs as 1 tiled pass, or 2 via
-    the §5.2 factorization; computes always ride the FIRST pass's tiles
-    (they are pulled back to input space, where pass 1 reads)."""
-    plans = []
-    for factor in fs.bmmc.factor_tiled(t):
-        plan = plan_tiled(factor, t)
-        if plan is None:
-            return None
-        plans.append(plan)
+def _fused_entries(plans, computes):
     entries = []
-    for comp, prefix in fs.computes:
+    for comp, prefix in computes:
         if isinstance(comp, Map):
             entries.append(("map", comp))
             continue
@@ -170,6 +187,38 @@ def _fused_plan_cached(fs: FusedStage, t: int):
         if ct is None:
             return None
         entries.append((kind, comp, ct))
+    return tuple(entries)
+
+
+@functools.lru_cache(maxsize=256)
+def _fused_plan_cached(fs: FusedStage, t: int):
+    """(pass plans, per-compute ComputeTables-or-Map entries) for a
+    cluster, or None when the megakernel cannot run it at this tile
+    parameter (no pass plannable, or a compute not tile-local in the
+    first pass — possible when the runtime ``t`` differs from the
+    clustering ``t``). The composed BMMC runs as ONE tiled pass (classic
+    witness columns or generalized witness directions), falling back to
+    the §5.2 two-pass factorization only for t > n/2; computes always
+    ride the FIRST pass's tiles (they are pulled back to input space,
+    where pass 1 reads).
+
+    A classic plan's tile span can be narrower than the maximal
+    ``ker(A[t:, :])`` span the clustering validated against; when a
+    compute's pairing vector needs the extra room, the first pass is
+    re-planned with :func:`repro.core.tiling.plan_general`, whose span
+    IS the maximum."""
+    try:
+        plans = list(plan_bmmc(fs.bmmc, t))
+    except ValueError:
+        return None
+    entries = _fused_entries(plans, fs.computes)
+    if entries is None and plans[0].row_cols:
+        general = plan_general(plans[0].bmmc, t)
+        if general is not None:
+            plans[0] = general
+            entries = _fused_entries(plans, fs.computes)
+    if entries is None:
+        return None
     return tuple(plans), tuple(entries)
 
 
@@ -407,7 +456,43 @@ def _lowered_cached(expr: Expr, n: int, optimized: bool) -> Program:
 @functools.lru_cache(maxsize=1024)
 def _clustered_cached(expr: Expr, n: int, optimized: bool,
                       t: int) -> tuple:
-    return cluster(_lowered_cached(expr, n, optimized), n, t)
+    prog = cluster(_lowered_cached(expr, n, optimized), n, t)
+    return fold_free(prog, n, t)
+
+
+# ---------------------------------------------------------------------------
+# Whole-program executables: ONE jitted callable per (program, engine,
+# batched) key. All per-stage Python work — plan-cache lookups, table ->
+# device conversion, DMA descriptor enumeration, kernel re-dispatch —
+# happens once at trace time; the offline tables are baked into the
+# jaxpr as constants. Repeated calls pay a single XLA dispatch instead
+# of one Python round per stage (the host-side overhead that dominates
+# multi-stage programs: the 2^12 sort re-dispatched 79 fused stages per
+# call before this cache). The key is independent of batch size, dtype
+# and trailing dims — jax.jit re-specializes on those internally without
+# growing this cache.
+# ---------------------------------------------------------------------------
+
+
+def _has_map(prog: Program) -> bool:
+    """Does the program carry a user ``Map`` callable (top-level or
+    inside a cluster's replay stages)?"""
+    return any(isinstance(s, Map)
+               or (isinstance(s, FusedStage)
+                   and any(isinstance(ss, Map) for ss in s.stages))
+               for s in prog)
+
+
+@functools.lru_cache(maxsize=512)
+def _program_executable(prog: Program, engine: str, batched: bool):
+    def run(x):
+        return run_program(prog, x, engine, batched=batched)
+    return jax.jit(run)
+
+
+def program_cache_info():
+    """The whole-program executable cache stats (hits/misses/currsize)."""
+    return _program_executable.cache_info()
 
 
 class CompiledExpr:
@@ -459,7 +544,7 @@ class CompiledExpr:
         inv = seq(*self.vjp_program(n))
         return compile_expr(inv, engine=self.engine, optimize=self.optimized)
 
-    def __call__(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
+    def _resolve_program(self, x: jax.Array, batched: bool) -> Program:
         axis = 1 if batched else 0
         if x.ndim <= axis:
             what = ("a leading batch dim plus the permuted axis" if batched
@@ -471,13 +556,34 @@ class CompiledExpr:
                 f"array length {x.shape[axis]} is not a power of 2")
         prog = self.program(n)
         if self.engine == "pallas" and self.optimized:
-            # megakernel clustering; the ref oracle and injected engines
-            # stay stage-at-a-time
+            # megakernel clustering + free-stage folding; the ref oracle
+            # and injected engines stay stage-at-a-time
             from ..kernels.ops import choose_tile
             d = x.shape[axis + 1] if x.ndim == axis + 2 else 1
             t = choose_tile(n, x.dtype.itemsize, d)
             if t is not None:
                 prog = self.clustered_program(n, t)
+        return prog
+
+    def __call__(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
+        prog = self._resolve_program(x, batched)
+        if isinstance(self.engine, str) and not _has_map(prog):
+            # whole-program compiled executable: one XLA dispatch per
+            # call, per-stage Python enumeration only at trace time.
+            # Programs carrying user Map callables stay on the eager
+            # per-stage path: Map's contract says "a jax function", but
+            # eager execution historically tolerated trace-unsafe fns
+            # (concrete-value branching, numpy round trips) and wrapping
+            # them in jit would turn that tolerance into a crash.
+            return _program_executable(prog, self.engine, batched)(x)
+        return run_program(prog, x, self.engine, batched=batched)
+
+    def call_per_stage(self, x: jax.Array, *,
+                       batched: bool = False) -> jax.Array:
+        """Execute stage-at-a-time through the Python dispatcher —
+        the pre-executable path, kept for the host-side dispatch-
+        overhead microbenchmark and as a debugging aid."""
+        prog = self._resolve_program(x, batched)
         return run_program(prog, x, self.engine, batched=batched)
 
 
@@ -487,22 +593,27 @@ _COMPILED: Dict[tuple, CompiledExpr] = {}
 def clear_caches() -> None:
     """Drop every compiled artifact the executor pins.
 
-    The geometry-executable cache holds jitted pallas executables (each
-    pinning a traced kernel), ``_COMPILED`` grows one entry per
-    ``(expr, engine, optimize)`` triple, and the plan/table caches hold
-    offline numpy tables — none of which is bounded across a long
-    geometry sweep. Test fixtures that iterate many sizes/dtypes call
-    this between sweeps to keep memory flat.
+    The geometry / block / lane / whole-program executable caches hold
+    jitted pallas executables (each pinning a traced kernel),
+    ``_COMPILED`` grows one entry per ``(expr, engine, optimize)``
+    triple, and the plan/table caches hold offline numpy tables — none
+    of which is bounded across a long geometry sweep. Test fixtures that
+    iterate many sizes/dtypes call this between sweeps to keep memory
+    flat.
     """
     from ..kernels import ops
 
     _geom_executable.cache_clear()
+    _block_executable.cache_clear()
+    _lane_executable.cache_clear()
+    _program_executable.cache_clear()
     _fused_plan_cached.cache_clear()
     _w_planar_cached.cache_clear()
     _lowered_cached.cache_clear()
     _clustered_cached.cache_clear()
     _COMPILED.clear()
     ops._plans_cached.cache_clear()
+    ops._class_plan_cached.cache_clear()
 
 
 def compile_expr(expr: Expr, *, engine: Union[str, EngineFn] = "pallas",

@@ -58,12 +58,22 @@ class Expr:
 
 @dataclasses.dataclass(frozen=True)
 class Perm(Expr):
-    """Primitive: BMMC index permutation ``out[A i ^ c] = x[i]``."""
+    """Primitive: BMMC index permutation ``out[A i ^ c] = x[i]``.
+
+    ``bmmc_class(t)`` exposes the kernel-class hierarchy of the
+    underlying BMMC (identity < complement < block < lane < tiled <
+    general; DESIGN.md §11) — the optimizer folds the free classes
+    (complement / block) into a neighbouring stage's DMA maps, and the
+    executor dispatches the rest to class-specialized kernels.
+    """
 
     bmmc: Bmmc
 
     def size_bits(self):
         return self.bmmc.n
+
+    def bmmc_class(self, t: int) -> str:
+        return self.bmmc.bmmc_class(t)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,9 +40,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, List, Optional, Sequence, Tuple
 
+from ..core import f2
 from ..core.bmmc import Bmmc
 from ..core.parm import parm_matrix
-from ..core.tiling import pairing_vector
+from ..core.tiling import pairing_vector, pass_spans
 from .ir import (Bfly, CmpHalves, Expr, Id, Ilv, Map, ParmE, Perm, Seq, Two,
                  PRIMITIVES)
 
@@ -161,32 +162,17 @@ def _run_fused(stages: Sequence[Expr], n: int) -> FusedStage:
     return FusedStage(tuple(stages), prefix, tuple(computes))
 
 
-def _factor_cols(bmmc: Bmmc, t: int) -> Optional[List[list]]:
-    """Witness columns of each tiled pass realizing ``bmmc`` (1 if tiled,
-    2 via the §5.2 UR·RLP factorization), or None if a pass's tile would
-    exceed the array."""
-    n = bmmc.n
-    out = []
-    for factor in bmmc.factor_tiled(t):
-        cols = factor.tiled_columns(t)
-        if cols is None:  # pragma: no cover - §5.2 factors are tiled
-            return None
-        n_over = len(set(cols) & set(range(t)))
-        if n - 2 * t + n_over < 0:
-            return None
-        out.append(cols)
-    return out
-
-
 def _run_valid(stages: Sequence[Expr], n: int, t: int) -> bool:
     """Can this run execute as one fused megakernel dispatch?
 
-    The composed permutation runs as its tiled passes (1 if tiled for
-    ``t``, else the §5.2 two-pass factorization), and every interior
-    compute must be tile-local *in the first pass* — its pairing vector
-    ``A_M^{-1} e_{n-1}`` (``M`` = prefix perms), pulled back to input
-    space, lies in the span of the first pass's tile row/column bits, so
-    both halves of every pair land in the same VMEM tile. (Computes are
+    The composed permutation runs as its tiled passes (ONE for any BMMC
+    the classic or generalized witness-direction planner takes — i.e.
+    always when 2t <= n — else the §5.2 two-pass factorization), and
+    every interior compute must be tile-local *in the first pass*: its
+    pairing vector ``A_M^{-1} e_{n-1}`` (``M`` = prefix perms), pulled
+    back to input space, lies in the span of the first pass's tile
+    directions (witness directions plus the low lane bits), so both
+    halves of every pair land in the same VMEM tile. (Computes are
     applied to the input tile before the first gather — a permutation
     only moves values, so a compute pulled back through its prefix
     commutes exactly.) ``Map`` is elementwise and always local; ``Bfly``
@@ -194,19 +180,17 @@ def _run_valid(stages: Sequence[Expr], n: int, t: int) -> bool:
     budget.
     """
     fs = _run_fused(stages, n)
-    all_cols = _factor_cols(fs.bmmc, t)
-    if all_cols is None:
+    spans = pass_spans(fs.bmmc, t)
+    if spans is None:
         return False
-    lr_mask = ((1 << t) - 1)
-    for cpos in all_cols[0]:
-        lr_mask |= 1 << cpos
+    first = spans[0]
     for comp, prefix in fs.computes:
         if isinstance(comp, Map):
             continue
         if isinstance(comp, Bfly):
             if len(comp.twiddles) * 8 > _W_TABLE_BYTES:
                 return False
-        if pairing_vector(prefix) & ~lr_mask:
+        if not f2.in_span(pairing_vector(prefix), first):
             return False
     return True
 
@@ -215,9 +199,12 @@ def cluster(program: Sequence[Expr], n: int,
             t: Optional[int]) -> Tuple[Expr, ...]:
     """Greedily group runs of a fused program into :class:`FusedStage`\\ s.
 
-    Starting at each ``Perm``, the run is extended one stage at a time —
-    or by a ``(compute, Perm)`` pair when the compute only becomes
-    tile-local under the *longer* composition — while :func:`_run_valid`
+    Starting at each ``Perm`` — or at a *compute* whose pairing vector
+    is already tile-local in the following permutation's first pass
+    (prefix = identity), so it rides that pass's tiles instead of paying
+    its own elementwise HBM sweep — the run is extended one stage at a
+    time, or by a ``(compute, Perm)`` pair when the compute only becomes
+    tile-local under the *longer* composition, while :func:`_run_valid`
     holds. ``t=None`` (array too small to tile) disables clustering.
     Stages outside any run pass through unchanged, so ``cluster`` is the
     identity on programs the megakernel cannot speed up.
@@ -229,12 +216,33 @@ def cluster(program: Sequence[Expr], n: int,
     i = 0
     while i < len(prog):
         s = prog[i]
-        if not isinstance(s, Perm):
+        run: List[Expr] = []
+        j = i
+        if isinstance(s, COMPUTES):
+            # leading computes: absorb the longest suffix of the compute
+            # block that is tile-local in the next Perm's first pass
+            k = i
+            while k < len(prog) and isinstance(prog[k], COMPUTES):
+                k += 1
+            if k < len(prog) and isinstance(prog[k], Perm):
+                for start in range(i, k):
+                    cand = list(prog[start:k + 1])
+                    if _run_valid(cand, n, t):
+                        out.extend(prog[i:start])
+                        run = cand
+                        j = k + 1
+                        break
+            if not run:
+                out.append(s)
+                i += 1
+                continue
+        elif isinstance(s, Perm):
+            run = [s]
+            j = i + 1
+        else:
             out.append(s)
             i += 1
             continue
-        run: List[Expr] = [s]
-        j = i + 1
         while j < len(prog):
             if _run_valid(run + [prog[j]], n, t):
                 run.append(prog[j])
@@ -253,6 +261,67 @@ def cluster(program: Sequence[Expr], n: int,
             out.append(_run_fused(run, n))
             i = j
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Free-stage folding (DESIGN.md §11): complement-only and tile-index-only
+# permutations never deserve their own HBM round trip — a complement
+# changes only the affine offset of a neighbouring stage's DMA source
+# map (same matrix, same tile geometry), and a tile-index-only
+# permutation relabels whole rows, which the neighbouring pass's
+# ``in_rows``/``out_rows`` tables absorb verbatim.
+# ---------------------------------------------------------------------------
+
+FREE_CLASSES = ("complement", "block")
+
+
+def _merge_stages(a: Expr, b: Expr) -> tuple:
+    sa = a.stages if isinstance(a, FusedStage) else (a,)
+    sb = b.stages if isinstance(b, FusedStage) else (b,)
+    return tuple(sa) + tuple(sb)
+
+
+def fold_free(program: Sequence[Expr], n: int,
+              t: Optional[int]) -> Tuple[Expr, ...]:
+    """Fold standalone free-class ``Perm`` stages (complement-only /
+    tile-index-only at ``t``) into an adjacent ``Perm``/:class:
+    `FusedStage`, so they cost zero HBM round trips.
+
+    Folding into the *following* stage composes the free BMMC into that
+    stage's DMA **source** map; folding into the *preceding* stage
+    composes into its **output** map. Either way the merged run is
+    re-validated with :func:`_run_valid` (a complement fold always
+    passes — the composed matrix is unchanged — and a block fold passes
+    whenever the composed plan keeps every compute tile-local), so the
+    pass is conservative: stages that cannot fold stay standalone.
+    """
+    prog = list(program)
+    if t is None:
+        return tuple(prog)
+    changed = True
+    while changed:
+        changed = False
+        for i, s in enumerate(prog):
+            if not isinstance(s, Perm):
+                continue
+            if s.bmmc.bmmc_class(t) not in FREE_CLASSES:
+                continue
+            for j in (i + 1, i - 1):
+                if not 0 <= j < len(prog):
+                    continue
+                other = prog[j]
+                if not isinstance(other, (Perm, FusedStage)):
+                    continue
+                merged = (_merge_stages(s, other) if j > i
+                          else _merge_stages(other, s))
+                if _run_valid(merged, n, t):
+                    lo, hi = min(i, j), max(i, j)
+                    prog[lo:hi + 1] = [_run_fused(merged, n)]
+                    changed = True
+                    break
+            if changed:
+                break
+    return tuple(prog)
 
 
 def expand_clusters(program: Sequence[Expr]) -> Program:
@@ -293,18 +362,30 @@ def num_perm_stages(program: Iterable[Expr]) -> int:
 
 
 def program_cost(program: Sequence[Expr], t: int, itemsize: int = 4) -> dict:
-    """Offline cost report: HBM round trips + DMA descriptors.
+    """Offline cost report: HBM round trips + DMA descriptors + per-class
+    kernel counts.
 
     ``t`` is the tile parameter of the executing kernel. Each ``Perm``
-    contributes its tiled passes (1 if tiled, else 2 — paper §5.2); each
-    :class:`FusedStage` exactly ONE pass regardless of how many stages it
-    swallowed (that is the megakernel's whole point); each *standalone*
-    compute stage one full elementwise sweep (read + write of the array —
-    what the per-stage jnp path pays). ``round_trips`` totals them;
-    ``round_trips_unfused`` is the same program with every cluster
-    expanded, so ``round_trips_saved`` is the megakernel's win as seen by
-    the transaction model.
+    contributes its class-dispatched kernel — zero passes for an
+    identity, ONE for block / lane / tiled / generalized-tiled, two only
+    for the §5.2 fallback; each :class:`FusedStage` likewise, regardless
+    of how many stages it swallowed (that is the megakernel's whole
+    point); each *standalone* compute stage one full elementwise sweep
+    (read + write of the array — what the per-stage jnp path pays).
+    ``round_trips`` totals them; ``round_trips_unfused`` is the same
+    program with every cluster expanded, so ``round_trips_saved`` is the
+    megakernel's win as seen by the transaction model.
+
+    ``kernels`` counts stage dispatches per kernel class (DESIGN.md §11
+    — ``block``/``lane``/``tiled``/``general``/``general2`` for
+    standalone ``Perm``\\ s, ``fused`` for megakernel clusters, which
+    always run the tiled pipeline regardless of their composed BMMC's
+    class, plus ``sweep`` for standalone computes); ``roofline_ratio``
+    is modeled
+    copy-kernel descriptors over program descriptors — 1.0 means the
+    whole program runs at the speed of ``round_trips`` array copies.
     """
+    from ..core.tiling import copy_descriptors
     from ..kernels.ops import modeled_transactions
 
     prog = tuple(program)
@@ -319,21 +400,38 @@ def program_cost(program: Sequence[Expr], t: int, itemsize: int = 4) -> dict:
     round_trips = 0
     compute_sweeps = 0
     fused_stages = 0
+    kernels: dict = {}
+    copy_desc = 0
     for s in prog:
         if isinstance(s, (Perm, FusedStage)):
-            tx = modeled_transactions(s.bmmc, t, itemsize)
+            if isinstance(s, FusedStage):
+                # a cluster always executes through the tiled megakernel
+                # (it needs the gather + epilogue machinery), so model
+                # its tiled passes — NOT the class fast path its composed
+                # BMMC might qualify for standalone
+                from ..core.tiling import stats_bmmc
+                stats = stats_bmmc(s.bmmc, t)
+                tx = {"passes": len(stats),
+                      "descriptors": sum(p.dma_descriptors() for p in stats),
+                      "bytes_moved": 2 * (1 << s.bmmc.n) * itemsize
+                      * len(stats),
+                      "kernel": "fused"}
+                fused_stages += 1
+            else:
+                tx = modeled_transactions(s.bmmc, t, itemsize)
             passes += tx["passes"]
             round_trips += tx["passes"]
             descriptors += tx["descriptors"]
             bytes_moved += tx["bytes_moved"]
-            if isinstance(s, FusedStage):
-                fused_stages += 1
+            kernels[tx["kernel"]] = kernels.get(tx["kernel"], 0) + 1
+            copy_desc += copy_descriptors(s.bmmc.n) * tx["passes"]
         else:  # standalone compute: one full elementwise sweep over HBM
             compute_sweeps += 1
             round_trips += 1
+            kernels["sweep"] = kernels.get("sweep", 0) + 1
             if n is not None:
-                teff = min(t, n)
-                descriptors += 2 * (1 << (n - teff))
+                descriptors += copy_descriptors(n)
+                copy_desc += copy_descriptors(n)
                 bytes_moved += 2 * (1 << n) * itemsize
     cost = {
         "stages": len(prog),
@@ -344,6 +442,8 @@ def program_cost(program: Sequence[Expr], t: int, itemsize: int = 4) -> dict:
         "descriptors": descriptors,
         "bytes_moved": bytes_moved,
         "round_trips": round_trips,
+        "kernels": kernels,
+        "roofline_ratio": copy_desc / max(descriptors, 1),
     }
     if fused_stages:
         unfused = program_cost(expand_clusters(prog), t, itemsize)

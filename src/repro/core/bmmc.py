@@ -126,6 +126,65 @@ class Bmmc:
     def is_tiled(self, t: int) -> bool:
         return self.tiled_columns(t) is not None
 
+    # -- class hierarchy (fast-path kernel dispatch; DESIGN.md §11) ----------
+    def is_complement_only(self) -> bool:
+        """y = x ^ c: A is the identity (c may be 0 -> identity perm)."""
+        return self.rows == f2.identity(self.n)
+
+    def block_bits(self) -> int:
+        """Largest k such that the permutation moves whole aligned 2^k
+        blocks: the low k bits pass through untouched (``rows[i] == e_i``
+        for ``i < k``, ``c`` zero on them) and no high output reads them
+        (``rows[i]`` zero on the low k columns for ``i >= k``). 0 when
+        the BMMC is not block-granular at any size."""
+        n = self.n
+        k = 0
+        while (k < n and self.rows[k] == (1 << k)
+               and not (self.c >> k) & 1):
+            k += 1
+        while k > 0:
+            mask = (1 << k) - 1
+            if all((self.rows[i] & mask) == 0 for i in range(k, n)):
+                break
+            k -= 1
+        return k
+
+    def is_tile_index_only(self, t: int) -> bool:
+        """Whole 2^t rows move wholesale: the block-permute fast path
+        (grid-remapped DMA, no intra-tile gather)."""
+        return 0 < t <= self.block_bits()
+
+    def is_lane_local(self, t: int) -> bool:
+        """Rows stay in place; each 2^t row is permuted identically in
+        place by the same t-bit BMMC: the lane-permute fast path (single
+        pass, in-VMEM row gather, no transpose pass)."""
+        n = self.n
+        if not 0 < t < n:
+            return False
+        return (all(self.rows[i] == (1 << i) for i in range(t, n))
+                and (self.c >> t) == 0
+                and all((self.rows[i] >> t) == 0 for i in range(t)))
+
+    def bmmc_class(self, t: int) -> str:
+        """The kernel class (most-specialized first; DESIGN.md §11):
+
+        ``identity`` < ``complement`` < ``block`` < ``lane`` < ``tiled``
+        < ``general``. Every class is also a member of all later classes
+        (a complement is a BPC hence tiled; a tiled BMMC is general), so
+        the classes *partition* BMMC space by first match.
+        """
+        if self.is_identity_perm():
+            return "identity"
+        if self.is_complement_only():
+            return "complement"
+        if self.is_tile_index_only(t):
+            return "block"
+        if self.is_lane_local(t):
+            return "lane"
+        if self.is_tiled(t):
+            return "tiled"
+        return "general"
+
     # -- factorization (paper §5.2) ------------------------------------------
     def factor_tiled(self, t: int) -> list:
         """Factor into tiled BMMCs to be applied *left to right*.

@@ -165,6 +165,56 @@ def to_perm(rows: Rows) -> Optional[list]:
     return p
 
 
+def nullspace(rows: Sequence[int], ncols: int) -> list:
+    """Basis of ``{x in F2^ncols : M x = 0}`` for a (possibly rectangular)
+    matrix given as row bitmasks. Each basis vector is an ``ncols``-bit int.
+
+    This is the workhorse of the *generalized* tiled planner (§5.1
+    extended): the kernel of the high rows ``A[t:, :]`` of an invertible
+    BMMC always has dimension ``t``, and any basis of it serves as the
+    witness *directions* where the paper demands witness *columns*.
+    """
+    pivots: dict = {}  # pivot column -> index into ``red``
+    red: list = []
+    for r in rows:
+        for c, ri in pivots.items():
+            if (r >> c) & 1:
+                r ^= red[ri]
+        if r:
+            c = (r & -r).bit_length() - 1
+            pivots[c] = len(red)
+            red.append(r)
+    for c, ri in pivots.items():  # back-substitute to reduced echelon
+        for ri2 in range(len(red)):
+            if ri2 != ri and (red[ri2] >> c) & 1:
+                red[ri2] ^= red[ri]
+    basis = []
+    for fc in range(ncols):
+        if fc in pivots:
+            continue
+        v = 1 << fc
+        for c, ri in pivots.items():
+            if (red[ri] >> fc) & 1:
+                v |= 1 << c
+        basis.append(v)
+    return basis
+
+
+def in_span(v: int, gens: Sequence[int]) -> bool:
+    """Is ``v`` in the F2 span of ``gens`` (arbitrary generating set)?"""
+    red: list = []
+    for g in gens:
+        for r in red:
+            if g & (r & -r):
+                g ^= r
+        if g:
+            red.append(g)
+    for r in red:
+        if v & (r & -r):
+            v ^= r
+    return v == 0
+
+
 # ---------------------------------------------------------------------------
 # Triangularity predicates (row i, col j; "upper" = support on j >= i)
 # ---------------------------------------------------------------------------

@@ -75,11 +75,20 @@ def _run_length(rows: np.ndarray) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
-    """Offline execution plan for one tiled-BMMC pass."""
+    """Offline execution plan for one tiled-BMMC pass.
+
+    ``row_dirs`` are the witness *directions* spanning the tile's row
+    structure — full n-bit vectors whose high parts are independent;
+    tile slot ``r`` holds rows offset by ``XOR(row_dirs[k] for bits k of
+    r)``. For a classically tiled plan (paper §5.1) these are the unit
+    vectors of the witness columns above ``t``; the generalized planner
+    (:func:`plan_general`) uses any basis of ``ker(A[t:, :])``, which
+    always exists — so every invertible BMMC gets a ONE-pass plan.
+    """
 
     bmmc: Bmmc
     t: int                      # n_tile: log2 elements per row
-    row_cols: tuple             # R, sorted
+    row_cols: tuple             # R, sorted (classic witness; () if general)
     n_over: int
     tb_positions: tuple         # thread-block bit positions, sorted (all >= t)
     in_rows: np.ndarray         # (n_tiles, rows_per_tile) int32
@@ -88,6 +97,7 @@ class TilePlan:
     src0: np.ndarray            # (rows_per_tile, 2^t) int32 flat gather table
     in_run: int                 # input DMA merge run (rows)
     out_run: int                # output DMA merge run (rows)
+    row_dirs: tuple = ()        # witness directions, len == log2(rows_per_tile)
 
     @property
     def n(self) -> int:
@@ -173,6 +183,137 @@ def plan_tiled(bmmc: Bmmc, t: int) -> Optional[TilePlan]:
         tb_positions=tuple(tb), in_rows=in_rows, out_rows=out_rows,
         xor_low=xor_low, src0=src0,
         in_run=_run_length(in_rows), out_run=_run_length(out_rows),
+        row_dirs=tuple(1 << p for p in r_not_l),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generalized one-pass planning (§5.1 with witness *directions*).
+#
+# The classic tiled condition demands t witness COLUMNS: unit directions
+# e_j with A e_j supported on the low t rows. But the kernel's actual
+# requirements are weaker: (1) each tile reads whole input rows, (2)
+# writes whole output rows, (3) tiles share one gather table up to a
+# per-tile lane XOR. All three survive replacing unit directions by ANY
+# basis of D = ker(A[t:, :]) — which has dimension exactly t for every
+# invertible A. Splitting D into pure-low directions (a of them; the
+# n_over analogue) and directions with independent high parts (the
+# rows-per-tile span), and choosing the thread-block complement among
+# the HIGH unit positions (so the per-tile base never touches the
+# lanes), yields tables honouring the exact same kernel contract:
+#
+#     out.flat[j] = tile.flat[src0[j ^ xor_low[g]]]
+#
+# Consequence: any BMMC with n - 2t + a >= 0 (always true for 2t <= n)
+# runs in ONE tiled pass — the §5.2 two-pass factorization becomes a
+# fallback for t > n/2 instead of the general path.
+# ---------------------------------------------------------------------------
+
+
+def _split_directions(bmmc: Bmmc, t: int) -> tuple:
+    """Basis of ``ker(A[t:, :])`` split into (a, row_dirs): ``a`` counts
+    the pure-low directions; ``row_dirs`` have independent high parts."""
+    d = f2.nullspace(bmmc.rows[t:], bmmc.n)
+    assert len(d) == t, "kernel of the high rows must have dimension t"
+    row_dirs: list = []
+    a = 0
+    for v in d:
+        h = v >> t
+        for w in row_dirs:  # eliminate previously-chosen high pivots
+            if h & ((w >> t) & -(w >> t)):
+                v ^= w
+                h = v >> t
+        if h == 0:
+            a += 1
+        else:
+            row_dirs.append(v)
+    return a, row_dirs
+
+
+def _tb_complement(row_dirs: list, t: int, n: int) -> list:
+    """High unit positions completing ``{high(row_dirs)}`` to F2^(n-t)."""
+    gens = [v >> t for v in row_dirs]
+    tb = []
+    for pos in range(t, n):
+        u = 1 << (pos - t)
+        if not f2.in_span(u, gens):
+            gens.append(u)
+            tb.append(pos)
+    return tb
+
+
+def _xor_dirs(r: int, row_dirs) -> int:
+    v = 0
+    k = 0
+    while r:
+        if r & 1:
+            v ^= row_dirs[k]
+        r >>= 1
+        k += 1
+    return v
+
+
+def _out_low_positions(bmmc: Bmmc, t: int, count: int) -> list:
+    """Low unit positions whose images under A[t:, :] are independent —
+    these enumerate a tile's distinct output rows."""
+    chosen: list = []
+    imgs: list = []
+    for j in range(t):
+        img = f2.matvec(bmmc.rows, 1 << j) >> t
+        if img and not f2.in_span(img, imgs):
+            imgs.append(img)
+            chosen.append(j)
+            if len(chosen) == count:
+                break
+    assert len(chosen) == count, "output row images must span"
+    return chosen
+
+
+def plan_general(bmmc: Bmmc, t: int) -> Optional[TilePlan]:
+    """One-pass plan for an arbitrary invertible BMMC (see block comment
+    above). Returns None when the tile would exceed the array
+    (``n - 2t + a < 0``, only possible for t > n/2)."""
+    n = bmmc.n
+    if not 0 < t <= n:
+        return None
+    low_mask = (1 << t) - 1
+    a, row_dirs = _split_directions(bmmc, t)
+    if n - 2 * t + a < 0:
+        return None
+    tb = _tb_complement(row_dirs, t, n)
+    rpt = 1 << (t - a)
+    n_tiles = 1 << len(tb)
+    row_len = 1 << t
+    chosen_low = _out_low_positions(bmmc, t, t - a)
+    ainv = bmmc.inverse()
+
+    in_rows = np.empty((n_tiles, rpt), dtype=np.int32)
+    out_rows = np.empty((n_tiles, rpt), dtype=np.int32)
+    xor_low = np.empty((n_tiles,), dtype=np.int32)
+    for g in range(n_tiles):
+        base = _scatter_bits(g, tb)
+        xor_low[g] = f2.matvec(bmmc.rows, base) & low_mask
+        for r in range(rpt):
+            in_rows[g, r] = (base ^ _xor_dirs(r, row_dirs)) >> t
+        for rp in range(rpt):
+            y = bmmc.apply(base ^ _scatter_bits(rp, chosen_low))
+            out_rows[g, rp] = y >> t
+
+    slot_of_row = {int(in_rows[0, r]): r for r in range(rpt)}
+    assert len(slot_of_row) == rpt, "tile rows must be distinct"
+    src0 = np.empty((rpt, row_len), dtype=np.int32)
+    for rp in range(rpt):
+        y_hi = int(out_rows[0, rp]) << t
+        for cp in range(row_len):
+            x = ainv.apply(y_hi | cp)
+            r = slot_of_row.get(x >> t)
+            assert r is not None, "tile-0 source must be in tile 0"
+            src0[rp, cp] = r * row_len + (x & low_mask)
+    return TilePlan(
+        bmmc=bmmc, t=t, row_cols=(), n_over=a, tb_positions=tuple(tb),
+        in_rows=in_rows, out_rows=out_rows, xor_low=xor_low, src0=src0,
+        in_run=_run_length(in_rows), out_run=_run_length(out_rows),
+        row_dirs=tuple(row_dirs),
     )
 
 
@@ -212,32 +353,53 @@ def pairing_vector(prefix: Bmmc) -> int:
     return f2.matvec(f2.inverse(prefix.rows), 1 << (prefix.n - 1))
 
 
+def _dir_coords(v: int, row_dirs: tuple, t: int) -> Optional[int]:
+    """Coordinates ``vr`` with ``high(v) == high(XOR(row_dirs[k] for bits
+    k of vr))``, or None when ``high(v)`` escapes the span."""
+    red: list = []                          # (high part, coordinate mask)
+    for k, d in enumerate(row_dirs):
+        hp, co = d >> t, 1 << k
+        for rh, rc in red:
+            if hp & (rh & -rh):
+                hp ^= rh
+                co ^= rc
+        if hp:
+            red.append((hp, co))
+    h, coord = v >> t, 0
+    for rh, rc in red:
+        if h & (rh & -rh):
+            h ^= rh
+            coord ^= rc
+    return coord if h == 0 else None
+
+
 def compute_tables(plan: TilePlan, prefix: Bmmc,
                    kind: str) -> Optional[ComputeTables]:
     """Build the epilogue tables for one compute, or None if the compute
-    is not tile-local under ``plan`` (pairing vector escapes L ∪ R)."""
+    is not tile-local under ``plan`` (pairing vector escapes the tile
+    span — row directions plus the low lane bits)."""
     n, t = plan.n, plan.t
-    low = set(range(t))
-    r_set = set(plan.row_cols)
-    r_not_l = sorted(r_set - low)
+    dirs = plan.row_dirs
     tb = list(plan.tb_positions)
     low_mask = (1 << t) - 1
-    lr_mask = low_mask
-    for pos in plan.row_cols:
-        lr_mask |= 1 << pos
 
     v = pairing_vector(prefix)
-    if v & ~lr_mask:
+    vr = _dir_coords(v, dirs, t)
+    if vr is None:
         return None
-    vr = _gather_bits(v, r_not_l)
-    vc = v & low_mask
+    vc = v & low_mask   # slot lane == low bits of x, so the lane XOR is raw
 
     rowvec = prefix.rows[n - 1]            # row n-1 of A_M: hi(x) predicate
     cbit = (prefix.c >> (n - 1)) & 1
     rpt, row_len, n_tiles = plan.rows_per_tile, plan.row_len, plan.n_tiles
+    hi_mask = ~low_mask  # slots address rows by direction HIGH parts only
 
+    # hi(x) = <rowvec, x> is F2-linear, so it splits over the tile's
+    # decomposition x = base_g ^ high(rowvec(r)) ^ lane: per-row (XOR of
+    # direction high parts), per-lane, per-tile terms.
     hi_row = np.fromiter(
-        (f2.parity(rowvec & _scatter_bits(r, r_not_l)) for r in range(rpt)),
+        (f2.parity(rowvec & (_xor_dirs(r, dirs) & hi_mask))
+         for r in range(rpt)),
         dtype=np.int32, count=rpt)
     hi_lane = np.fromiter(
         (f2.parity(rowvec & c) for c in range(row_len)),
@@ -251,7 +413,7 @@ def compute_tables(plan: TilePlan, prefix: Bmmc,
     if kind == "bfly":
         twmask = (1 << (n - 1)) - 1        # pair index: m with bit n-1 dropped
         tw_row = np.fromiter(
-            (f2.matvec(prefix.rows, _scatter_bits(r, r_not_l)) & twmask
+            (f2.matvec(prefix.rows, _xor_dirs(r, dirs) & hi_mask) & twmask
              for r in range(rpt)), dtype=np.int32, count=rpt)
         tw_lane = np.fromiter(
             (f2.matvec(prefix.rows, c) & twmask for c in range(row_len)),
@@ -335,11 +497,64 @@ def plan_stats(bmmc: Bmmc, t: int) -> Optional[PlanStats]:
                      in_run=1 << k_in, out_run=1 << k_out)
 
 
+def plan_stats_general(bmmc: Bmmc, t: int) -> Optional[PlanStats]:
+    """Analytic counterpart of :func:`plan_general` (O(n^2) bit math)."""
+    n = bmmc.n
+    if not 0 < t <= n:
+        return None
+    a, row_dirs = _split_directions(bmmc, t)
+    if n - 2 * t + a < 0:
+        return None
+    tb = _tb_complement(row_dirs, t, n)
+    rpt = 1 << (t - a)
+    chosen_low = _out_low_positions(bmmc, t, t - a)
+
+    # input-run: in_rows[g, r] counts binarily in r iff high(row_dirs[i])
+    # == 2^i for i < k and nothing else (higher dirs, tb base bits)
+    # touches the low k row-id bits.
+    hi = [v >> t for v in row_dirs]
+    k_in = 0
+    while k_in < len(hi):
+        k = k_in + 1
+        mask = (1 << k) - 1
+        ok = all(hi[i] == (1 << i) for i in range(k))
+        ok = ok and all((h & mask) == 0 for h in hi[k:])
+        ok = ok and all((pos - t) >= k for pos in tb)
+        if not ok:
+            break
+        k_in = k
+
+    deltas = [f2.matvec(bmmc.rows, 1 << pos) >> t for pos in chosen_low]
+    others = [f2.matvec(bmmc.rows, 1 << pos) >> t for pos in tb]
+    others.append(bmmc.c >> t)
+    k_out = 0
+    while k_out < len(deltas):
+        k = k_out + 1
+        mask = (1 << k) - 1
+        ok = all(deltas[i] == (1 << i) for i in range(k))
+        ok = ok and all((d & mask) == 0 for d in deltas[k:])
+        ok = ok and all((o & mask) == 0 for o in others)
+        if not ok:
+            break
+        k_out = k
+    return PlanStats(n=n, t=t, n_over=a, n_tiles=1 << len(tb),
+                     rows_per_tile=rpt, row_len=1 << t,
+                     in_run=1 << k_in, out_run=1 << k_out)
+
+
 def stats_bmmc(bmmc: Bmmc, t: int) -> list:
-    """Analytic stats for the 1-2 tiled passes of an arbitrary BMMC."""
+    """Analytic stats for the tiled passes of an arbitrary BMMC: one
+    (classic or generalized) pass whenever possible, the §5.2 two-pass
+    factorization as the fallback."""
+    s = plan_stats(bmmc, t)
+    if s is not None:
+        return [s]
+    s = plan_stats_general(bmmc, t)
+    if s is not None:
+        return [s]
     out = []
     for factor in bmmc.factor_tiled(t):
-        s = plan_stats(factor, t)
+        s = plan_stats(factor, t) or plan_stats_general(factor, t)
         if s is None:
             raise ValueError(f"factor expected tiled for t={t}")
         out.append(s)
@@ -347,14 +562,217 @@ def stats_bmmc(bmmc: Bmmc, t: int) -> list:
 
 
 def plan_bmmc(bmmc: Bmmc, t: int) -> list:
-    """Plan an arbitrary BMMC as 1-2 tiled passes (paper §5.2)."""
+    """Plan an arbitrary BMMC as tiled passes: 1 via the classic witness
+    columns (paper §5.1) or the generalized witness directions
+    (:func:`plan_general`), else 2 via the §5.2 factorization (now only
+    reachable for t > n/2, where the direction split may fall short)."""
+    p = plan_tiled(bmmc, t)
+    if p is not None:
+        return [p]
+    p = plan_general(bmmc, t)
+    if p is not None:
+        return [p]
     plans = []
     for factor in bmmc.factor_tiled(t):
-        p = plan_tiled(factor, t)
+        p = plan_tiled(factor, t) or plan_general(factor, t)
         if p is None:
             raise ValueError(f"factor expected to be tiled for t={t}: {factor}")
         plans.append(p)
     return plans
+
+
+def pass_spans(bmmc: Bmmc, t: int) -> Optional[list]:
+    """Per-pass tile spans of :func:`plan_bmmc`, without table enumeration.
+
+    Each span is a tuple of generating direction vectors: a vector ``v``
+    is tile-local for that pass iff ``v`` lies in the span — the
+    membership check :mod:`repro.combinators.optimize` uses to decide
+    whether a compute can ride the pass's tiles. The first pass's span
+    is the MAXIMAL achievable one, ``ker(A[t:, :]) + low`` — the classic
+    witness-column span is always contained in it, and the plan builder
+    falls back to :func:`plan_general` (whose span IS the maximum) when
+    a compute needs the extra room. Returns None when a pass's tile
+    would exceed the array (t > n/2 with a deficient direction split).
+    """
+    n = bmmc.n
+    if not 0 < t <= n:
+        return None
+    low = tuple(1 << j for j in range(t))
+
+    def span_of(b: Bmmc) -> Optional[tuple]:
+        a, row_dirs = _split_directions(b, t)
+        if n - 2 * t + a < 0:
+            return None
+        return tuple(row_dirs) + low
+
+    s = span_of(bmmc)
+    if s is not None:
+        return [s]
+    spans = []
+    for factor in bmmc.factor_tiled(t):
+        s = span_of(factor)
+        if s is None:
+            return None
+        spans.append(s)
+    return spans
+
+
+# ---------------------------------------------------------------------------
+# Class fast-path plans (DESIGN.md §11). The simplest BMMC classes skip
+# the tiled gather pipeline entirely:
+#
+# * block (tile-index-only): whole aligned 2^b blocks move wholesale —
+#   a grid-remapped DMA copy, descriptor count identical to the
+#   copy-through-VMEM roofline baseline.
+# * lane (lane-local): rows stay in place and every row is permuted
+#   identically — a single in-VMEM row gather, no transpose pass.
+# ---------------------------------------------------------------------------
+
+_COPY_BLOCK_BITS = 11   # log2(8 rows x 256 lanes): copy_through_vmem's block
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Grid-remapped DMA plan: output block ``g`` is input block
+    ``src_rows[g]``, each block 2^b consecutive elements."""
+
+    bmmc: Bmmc
+    b: int                      # log2 elements per moved block
+    src_rows: np.ndarray        # (2^(n-b),) int32
+
+    @property
+    def n(self) -> int:
+        return self.bmmc.n
+
+    @property
+    def n_rows(self) -> int:
+        return self.src_rows.shape[0]
+
+    def dma_descriptors(self) -> int:
+        """One read + one write per block — the copy kernel's count when
+        ``b == _COPY_BLOCK_BITS``."""
+        return 2 * self.n_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class LanePlan:
+    """Single-pass in-VMEM row gather: ``out[row, lane] = x[row,
+    src_lane[lane]]`` — rows never move, so there is no transpose pass."""
+
+    bmmc: Bmmc
+    t: int                      # log2 lanes per row
+    src_lane: np.ndarray        # (2^t,) int32
+    rows_per_block: int         # rows staged through VMEM per grid step
+
+    @property
+    def n(self) -> int:
+        return self.bmmc.n
+
+    @property
+    def n_rows(self) -> int:
+        return 1 << (self.n - self.t)
+
+    def dma_descriptors(self) -> int:
+        return 2 * (self.n_rows // self.rows_per_block)
+
+
+def _block_granularity(bmmc: Bmmc) -> int:
+    """log2 elements per moved block: the class granularity capped at
+    the copy baseline's block, so descriptor counts match
+    ``copy_through_vmem`` exactly whenever the class allows it."""
+    return min(bmmc.block_bits(), _COPY_BLOCK_BITS, bmmc.n - 1)
+
+
+def _lane_rows_per_block(n: int, t: int) -> int:
+    """Rows staged per grid step: one copy-sized block when available."""
+    return max(1, min(1 << (n - t), 1 << max(0, _COPY_BLOCK_BITS - t)))
+
+
+def plan_block(bmmc: Bmmc, t: int) -> Optional[BlockPlan]:
+    """Block-permute plan, or None if not tile-index-only at ``t``."""
+    n = bmmc.n
+    k = bmmc.block_bits()
+    if not (0 < t <= k < n):
+        return None
+    b = _block_granularity(bmmc)
+    # sub-BMMC on the high n-b bits (rows >= b read only columns >= b)
+    sub_rows = tuple(bmmc.rows[i] >> b for i in range(b, n))
+    sub = Bmmc(sub_rows, bmmc.c >> b)
+    sub_inv = sub.inverse()
+    src = np.fromiter((sub_inv.apply(g) for g in range(1 << (n - b))),
+                      dtype=np.int32, count=1 << (n - b))
+    return BlockPlan(bmmc=bmmc, b=b, src_rows=src)
+
+
+def plan_lane(bmmc: Bmmc, t: int) -> Optional[LanePlan]:
+    """Lane-permute plan, or None if not lane-local at ``t``."""
+    n = bmmc.n
+    if not bmmc.is_lane_local(t):
+        return None
+    low_mask = (1 << t) - 1
+    sub = Bmmc(tuple(bmmc.rows[i] & low_mask for i in range(t)),
+               bmmc.c & low_mask)
+    sub_inv = sub.inverse()
+    src = np.fromiter((sub_inv.apply(l) for l in range(1 << t)),
+                      dtype=np.int32, count=1 << t)
+    return LanePlan(bmmc=bmmc, t=t, src_lane=src,
+                    rows_per_block=_lane_rows_per_block(n, t))
+
+
+def copy_descriptors(n: int) -> int:
+    """Modeled descriptor count of the copy-through-VMEM roofline
+    baseline for a 2^n array: one read + one write per copy block."""
+    return 2 * (1 << max(0, n - _COPY_BLOCK_BITS))
+
+
+def dispatch_kernel(bmmc: Bmmc, t: int) -> str:
+    """The kernel the class dispatch selects (DESIGN.md §11):
+
+    ``none`` (identity), ``block`` (grid-remapped DMA, no gather),
+    ``lane`` (single in-VMEM row gather), ``tiled`` (classic §5.1 one-
+    pass), ``general`` (generalized witness-direction one-pass), or
+    ``general2`` (§5.2 two-pass fallback, t > n/2 only).
+    """
+    cls = bmmc.bmmc_class(t)
+    if cls == "identity":
+        return "none"
+    if cls == "complement":
+        # a high-only complement moves whole blocks; a low-only one
+        # permutes lanes; a mixed complement is a BPC -> one tiled pass
+        low_part, high_part = bmmc.c & ((1 << t) - 1), bmmc.c >> t
+        if low_part and high_part:
+            return "tiled"
+        return "block" if not low_part else "lane"
+    if cls in ("block", "lane", "tiled"):
+        return cls
+    return "general" if plan_stats_general(bmmc, t) else "general2"
+
+
+def class_stats(bmmc: Bmmc, t: int) -> dict:
+    """Analytic per-class execution stats: the BMMC class, dispatched
+    kernel, pass count, modeled DMA descriptors, and the copy-roofline
+    ratio (copy descriptors / class descriptors; 1.0 == executes at the
+    speed of an array copy, the paper's §2.3 reference point)."""
+    n = bmmc.n
+    cls = bmmc.bmmc_class(t)
+    kernel = dispatch_kernel(bmmc, t)
+    copy_desc = copy_descriptors(n)
+    # block / lane counts are closed-form (no table enumeration — the
+    # PlanStats principle: usable at paper scale, n = 30)
+    if kernel == "none":
+        desc, passes = 0, 0
+    elif kernel == "block":
+        desc, passes = 2 * (1 << (n - _block_granularity(bmmc))), 1
+    elif kernel == "lane":
+        desc = 2 * ((1 << (n - t)) // _lane_rows_per_block(n, t))
+        passes = 1
+    else:
+        stats = stats_bmmc(bmmc, t)
+        desc = sum(s.dma_descriptors() for s in stats)
+        passes = len(stats)
+    return {"class": cls, "kernel": kernel, "passes": passes,
+            "descriptors": desc, "copy_descriptors": copy_desc,
+            "roofline_ratio": copy_desc / max(desc, 1) if passes else 1.0}
 
 
 # ---------------------------------------------------------------------------

@@ -368,6 +368,149 @@ def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Class fast-path kernels (DESIGN.md §11). The simplest BMMC classes do
+# not need the two-buffer gather pipeline at all:
+#
+# * block-permute: whole 2^b-element blocks move wholesale. The kernel
+#   is a copy whose *input grid mapping* is remapped through the offline
+#   source-row table (scalar prefetch feeding the BlockSpec index_map) —
+#   pallas's own pipeline double-buffers the DMAs, there is no intra-
+#   tile gather, and the descriptor count equals `copy_through_vmem`'s.
+# * lane-permute: rows never move; each row is permuted in place by the
+#   same t-bit map. One pass, in-VMEM `jnp.take` along the lane axis,
+#   no transpose pass.
+# ---------------------------------------------------------------------------
+
+
+def _block_kernel(src_ref, x_ref, o_ref):
+    del src_ref  # consumed by the index_map; the body is a pure copy
+    o_ref[...] = x_ref[...]
+
+
+def block_permute_tables(x: jax.Array, src_rows, *, geometry: tuple,
+                         interpret: bool = True,
+                         batched: bool = False) -> jax.Array:
+    """Grid-remapped DMA copy: output block ``g`` reads input block
+    ``src_rows[g]``. ``geometry`` is :func:`block_geometry` output."""
+    n, b, n_rows = geometry
+    blk = 1 << b
+    lead = 1 if batched else 0
+    has_tail = x.ndim == 2 + lead
+    d = x.shape[1 + lead] if has_tail else 1
+    row_view = (n_rows, blk) + ((d,) if has_tail else ())
+    if batched:
+        row_view = (x.shape[0],) + row_view
+    xv = x.reshape(row_view)
+    tail = (d,) if has_tail else ()
+    blk_shape = ((1,) if batched else ()) + (1, blk) + tail
+
+    if batched:
+        def in_map(bi, i, src_ref):
+            return (bi, src_ref[i], 0) + (0,) * len(tail)
+
+        def out_map(bi, i, src_ref):
+            return (bi, i, 0) + (0,) * len(tail)
+        grid = (x.shape[0], n_rows)
+    else:
+        def in_map(i, src_ref):
+            return (src_ref[i], 0) + (0,) * len(tail)
+
+        def out_map(i, src_ref):
+            return (i, 0) + (0,) * len(tail)
+        grid = (n_rows,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec(blk_shape, in_map)],
+        out_specs=pl.BlockSpec(blk_shape, out_map),
+    )
+    out = pl.pallas_call(
+        _block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(row_view, x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * len(grid),
+        ),
+    )(jnp.asarray(src_rows), xv)
+    return out.reshape(x.shape)
+
+
+def block_geometry(plan) -> tuple:
+    """Hashable kernel geometry of a :class:`repro.core.tiling.BlockPlan`."""
+    return (plan.n, plan.b, plan.n_rows)
+
+
+def block_permute(x: jax.Array, plan, *, interpret: bool = True,
+                  batched: bool = False) -> jax.Array:
+    return block_permute_tables(x, plan.src_rows,
+                                geometry=block_geometry(plan),
+                                interpret=interpret, batched=batched)
+
+
+def lane_permute_tables(x: jax.Array, src_lane, *, geometry: tuple,
+                        interpret: bool = True,
+                        batched: bool = False) -> jax.Array:
+    """Single-pass in-VMEM row gather: ``out[.., row, lane] = x[.., row,
+    src_lane[lane]]``. ``geometry`` is :func:`lane_geometry` output."""
+    n, t, rpb = geometry
+    row_len = 1 << t
+    n_rows = 1 << (n - t)
+    lead = 1 if batched else 0
+    has_tail = x.ndim == 2 + lead
+    d = x.shape[1 + lead] if has_tail else 1
+    tail = (d,) if has_tail else ()
+    row_view = (n_rows, row_len) + tail
+    if batched:
+        row_view = (x.shape[0],) + row_view
+    xv = x.reshape(row_view)
+    blk_shape = ((1,) if batched else ()) + (rpb, row_len) + tail
+    lane_axis = len(blk_shape) - 1 - len(tail)
+
+    def kern(src_ref, x_ref, o_ref):
+        o_ref[...] = jnp.take(x_ref[...], src_ref[...], axis=lane_axis)
+
+    if batched:
+        def blk_map(bi, i, src_ref):
+            return (bi, i, 0) + (0,) * len(tail)
+        grid = (x.shape[0], n_rows // rpb)
+    else:
+        def blk_map(i, src_ref):
+            return (i, 0) + (0,) * len(tail)
+        grid = (n_rows // rpb,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec(blk_shape, blk_map)],
+        out_specs=pl.BlockSpec(blk_shape, blk_map),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(row_view, x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * len(grid),
+        ),
+    )(jnp.asarray(src_lane), xv)
+    return out.reshape(x.shape)
+
+
+def lane_geometry(plan) -> tuple:
+    """Hashable kernel geometry of a :class:`repro.core.tiling.LanePlan`."""
+    return (plan.n, plan.t, plan.rows_per_block)
+
+
+def lane_permute(x: jax.Array, plan, *, interpret: bool = True,
+                 batched: bool = False) -> jax.Array:
+    return lane_permute_tables(x, plan.src_lane,
+                               geometry=lane_geometry(plan),
+                               interpret=interpret, batched=batched)
+
+
+# ---------------------------------------------------------------------------
 # Baseline copy kernel — the "100% effective bandwidth" reference in the
 # paper's tables (§2.3, §6). Same DMA structure, identity permutation.
 # ---------------------------------------------------------------------------

@@ -1,11 +1,19 @@
-"""Public BMMC permutation ops: planning, dispatch, jit-friendly wrappers.
+"""Public BMMC permutation ops: planning, class dispatch, jit wrappers.
 
-``bmmc_permute`` is the user-facing entry point. Dispatch:
+``bmmc_permute`` is the user-facing entry point. Dispatch walks the
+class hierarchy most-specialized-first (DESIGN.md §11):
 
 * degenerate / tiny arrays                -> pure-jnp gather (ref oracle);
+* identity                                -> no-op;
+* tile-index-only (incl. high complement) -> block-permute fast path
+                                             (grid-remapped DMA copy);
+* lane-local (incl. low complement)       -> lane-permute fast path
+                                             (single in-VMEM row gather);
 * tiled BMMC (incl. every BPC)            -> one tiled Pallas pass;
-* general BMMC                            -> two tiled passes, A = (UR)(RLP)
-                                             (paper §5.2).
+* general BMMC                            -> ONE generalized tiled pass
+                                             (witness directions), with
+                                             the §5.2 two-pass
+                                             factorization as fallback.
 
 The BMMC is a *trace-time constant* (offline setting, paper §3/§6): plans
 and tables are built once per (matrix, shape) and cached.
@@ -20,9 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bmmc import Bmmc
-from ..core.tiling import TilePlan, plan_bmmc, plan_tiled
+from ..core.tiling import (class_stats, copy_descriptors, dispatch_kernel,
+                           plan_block, plan_bmmc, plan_lane)
 from . import ref as _ref
-from .bmmc_permute import tiled_permute
+from .bmmc_permute import block_permute, lane_permute, tiled_permute
 
 # VMEM working-set budget for one tile buffer. The double-buffered pipeline
 # holds 2 * num_buffers tile-sized slots (in + out, default num_buffers=2);
@@ -58,19 +67,42 @@ def _plans_cached(rows: tuple, c: int, t: int) -> tuple:
     return tuple(plan_bmmc(Bmmc(rows, c), t))
 
 
+@functools.lru_cache(maxsize=512)
+def _class_plan_cached(rows: tuple, c: int, t: int) -> tuple:
+    """(kernel name, plan payload) for the class dispatch — the offline
+    decision shared by `bmmc_permute` and the combinator executor. The
+    payload is the fast-path plan for "block"/"lane", the tiled pass
+    tuple otherwise."""
+    bmmc = Bmmc(rows, c)
+    kernel = dispatch_kernel(bmmc, t)
+    if kernel == "none":
+        return (kernel, ())
+    if kernel == "block":
+        return (kernel, plan_block(bmmc, t))
+    if kernel == "lane":
+        return (kernel, plan_lane(bmmc, t))
+    return (kernel, _plans_cached(rows, c, t))
+
+
 def bmmc_plans(bmmc: Bmmc, t: int):
     return _plans_cached(bmmc.rows, bmmc.c, t)
 
 
-def dispatch_plans(x: jax.Array, bmmc: Bmmc, t: Optional[int],
+def class_plan(bmmc: Bmmc, t: int) -> tuple:
+    """Class-dispatch decision: ``(kernel, payload)``; see
+    :func:`repro.core.tiling.dispatch_kernel` for the kernel names."""
+    return _class_plan_cached(bmmc.rows, bmmc.c, t)
+
+
+def class_dispatch(x: jax.Array, bmmc: Bmmc, t: Optional[int],
                    batched: bool) -> Optional[tuple]:
-    """The tiled-kernel dispatch decision for this array: the pass plans,
-    or None when the array is too small to tile (callers fall back to the
-    reference gather). Shared by every pallas execution path."""
+    """The full class-dispatch decision for this array: ``(kernel,
+    payload)``, or None when the array is too small to tile (callers
+    fall back to the reference gather)."""
     lead = 1 if batched else 0
     d = x.shape[1 + lead] if x.ndim == 2 + lead else 1
     teff = choose_tile(bmmc.n, x.dtype.itemsize, d, t)
-    return None if teff is None else bmmc_plans(bmmc, teff)
+    return None if teff is None else class_plan(bmmc, teff)
 
 
 def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
@@ -78,9 +110,9 @@ def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
                  batched: bool = False) -> jax.Array:
     """Permute ``x`` (shape (2^n,) or (2^n, d)) by ``out[A i ^ c] = x[i]``.
 
-    ``engine``: "pallas" (tiled kernels) or "ref" (pure-jnp oracle).
-    ``batched=True`` shifts the permuted axis to axis 1 — ``x`` is
-    ``(B, 2^n)`` or ``(B, 2^n, d)`` and all batch rows share one plan.
+    ``engine``: "pallas" (class-dispatched kernels) or "ref" (pure-jnp
+    oracle). ``batched=True`` shifts the permuted axis to axis 1 — ``x``
+    is ``(B, 2^n)`` or ``(B, 2^n, d)`` and all batch rows share one plan.
     """
     lead = 1 if batched else 0
     assert x.shape[lead] == bmmc.size, (x.shape, bmmc.n)
@@ -88,16 +120,24 @@ def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
         return _ref.bmmc_ref(x, bmmc, batched=batched)
     if bmmc.is_identity_perm():
         return x
-    plans = dispatch_plans(x, bmmc, t, batched)
-    if plans is None:
+    got = class_dispatch(x, bmmc, t, batched)
+    if got is None:
         return _ref.bmmc_ref(x, bmmc, batched=batched)
-    for plan in plans:
+    kernel, payload = got
+    if kernel == "block":
+        return block_permute(x, payload, interpret=interpret,
+                             batched=batched)
+    if kernel == "lane":
+        return lane_permute(x, payload, interpret=interpret,
+                            batched=batched)
+    for plan in payload:
         x = tiled_permute(x, plan, interpret=interpret, batched=batched)
     return x
 
 
 def num_passes(bmmc: Bmmc, t: int) -> int:
-    """1 for tiled BMMCs (incl. all BPCs), 2 for general BMMCs (§5.2)."""
+    """1 for every BMMC the one-pass planners take (tiled, generalized);
+    2 only for the §5.2 fallback (t > n/2)."""
     return len(bmmc_plans(bmmc, t))
 
 
@@ -117,22 +157,39 @@ def make_bmmc_permute(bmmc: Bmmc, *, t: Optional[int] = None,
 # ---------------------------------------------------------------------------
 
 def modeled_transactions(bmmc: Bmmc, t: int, itemsize: int = 4) -> dict:
-    """DMA descriptor counts + bytes for the tiled pipeline vs a copy."""
-    plans = bmmc_plans(bmmc, t)
-    total_desc = sum(p.dma_descriptors() for p in plans)
+    """DMA descriptor counts + bytes for the class-dispatched kernel vs a
+    copy. ``class``/``kernel``/``roofline_ratio`` report the dispatch
+    decision and the modeled fraction of copy-kernel descriptor
+    throughput (1.0 == the permutation costs exactly an array copy)."""
     n = bmmc.n
     nbytes = (1 << n) * itemsize
-    # copy baseline: same row view, one descriptor per in_run-sized run both ways
-    copy_desc = 2 * (1 << (n - t))
-    min_run = min(min(p.in_run, p.out_run) for p in plans)
+    cs = class_stats(bmmc, t)
+    passes = max(cs["passes"], 0)
+    kernel, payload = class_plan(bmmc, t)
+    if kernel in ("none", "block", "lane"):
+        total_desc = cs["descriptors"]
+        min_run_bytes = nbytes if kernel == "none" else (
+            (1 << payload.b) * itemsize if kernel == "block"
+            else payload.rows_per_block * (1 << payload.t) * itemsize)
+    else:
+        plans = payload
+        total_desc = sum(p.dma_descriptors() for p in plans)
+        min_run = min(min(p.in_run, p.out_run) for p in plans)
+        min_run_bytes = min_run * (1 << t) * itemsize
     return {
-        "passes": len(plans),
+        "class": cs["class"],
+        "kernel": kernel,
+        "passes": passes,
         "descriptors": total_desc,
-        "copy_descriptors": copy_desc,
-        "bytes_moved": nbytes * 2 * len(plans),
+        # copy baseline at the tiled row view (legacy key) and at the
+        # copy kernel's own block size (what roofline_ratio uses)
+        "copy_descriptors": 2 * (1 << (n - t)),
+        "roofline_ratio": (copy_descriptors(n) / max(total_desc, 1)
+                           if passes else 1.0),
+        "bytes_moved": nbytes * 2 * passes,
         "copy_bytes": nbytes * 2,
-        "min_run_bytes": min_run * (1 << t) * itemsize,
+        "min_run_bytes": min_run_bytes,
         # modeled fraction of copy throughput, assuming descriptor-issue
         # bound when runs are short and bandwidth bound otherwise:
-        "bandwidth_fraction": (nbytes * 2) / (nbytes * 2 * len(plans)),
+        "bandwidth_fraction": 1.0 if passes == 0 else 1.0 / passes,
     }
