@@ -15,15 +15,33 @@ regression, not noise:
 * ``classdispatch/*/model`` rows: the dispatched kernel class and its
   roofline ratio must not regress.
 
-Wall-clock rows are reported but never gated (CI machines are noisy).
-Rows missing from the baseline (older recordings) are skipped with a
-note, so the gate tightens automatically as baselines are refreshed.
+Model-honesty gate (PR 6): ``*/telemetry`` rows must report
+``counts_match=True`` — the executor's recorded per-class dispatch
+counters equal the transaction model's kernel-class counts, a fully
+deterministic comparison; and ``*/model_error`` rows (modeled vs
+measured speedup per workload) must not *drift* beyond
+``DRIFT_TOL``× the baseline's drift — drift is the symmetric ratio
+``max(r, 1/r)`` of measured over modeled speedup, so the gate fires
+when the model's relationship to the wall clock changes by a factor,
+while ordinary CI machine noise (well under the tolerance) passes.
+
+Other wall-clock rows are reported but never gated (CI machines are
+noisy). Rows missing from the baseline (older recordings) are skipped
+with a note, so the gate tightens automatically as baselines are
+refreshed.
 """
 from __future__ import annotations
 
 import json
 import re
 import sys
+
+# a workload's measured/modeled drift may grow this much vs the
+# baseline before the gate fires: honest-model changes land well under
+# it, machine noise too; an order-of-magnitude lie does not
+DRIFT_TOL = 5.0
+
+_GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry")
 
 
 def _derived(row: dict) -> dict:
@@ -47,6 +65,21 @@ def _rows_by_name(payload: dict) -> dict:
     return {r["name"]: r for r in payload.get("rows", [])}
 
 
+def _check_drift(name: str, brow: dict, crow: dict) -> list:
+    """Model-honesty comparison for one ``*/model_error`` row pair."""
+    try:
+        b_drift = float(_derived(brow).get("drift"))
+        c_drift = float(_derived(crow).get("drift"))
+    except (TypeError, ValueError):
+        return [f"{name}: model_error row missing a parseable drift value"]
+    if c_drift > b_drift * DRIFT_TOL:
+        return [
+            f"{name}: modeled/measured drift {b_drift:.2f} -> {c_drift:.2f} "
+            f"(exceeds {DRIFT_TOL}x tolerance; the transaction model no "
+            "longer tracks the wall clock)"]
+    return []
+
+
 def check(baseline: dict, current: dict) -> list:
     base = _rows_by_name(baseline)
     cur = _rows_by_name(current)
@@ -55,10 +88,23 @@ def check(baseline: dict, current: dict) -> list:
     # a gated row that vanishes from the fresh run is itself a failure —
     # otherwise a renamed/dropped benchmark silently un-gates its numbers
     for name in sorted(base):
-        if ((name.endswith("/model") or name.endswith("/program"))
-                and name not in cur):
+        if name.endswith(_GATED_SUFFIXES) and name not in cur:
             failures.append(f"{name}: gated row missing from current run")
     for name, row in sorted(cur.items()):
+        if name.endswith("/telemetry"):
+            # deterministic counter-vs-model comparison: never True->False
+            if _derived(row).get("counts_match") != "True":
+                failures.append(
+                    f"{name}: recorded dispatch counters diverge from the "
+                    f"transaction model (counts_match="
+                    f"{_derived(row).get('counts_match')})")
+            continue
+        if name.endswith("/model_error"):
+            if name in base:
+                failures.extend(_check_drift(name, base[name], row))
+            else:
+                skipped.append(name)
+            continue
         if not (name.endswith("/model") or name.endswith("/program")):
             continue
         if name not in base:

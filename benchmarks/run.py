@@ -4,7 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Run with
 ``PYTHONPATH=src python -m benchmarks.run [--only fig9,...]``.
 ``--json OUT.json`` additionally writes the rows (plus run metadata) as
 machine-readable JSON — the format the ``BENCH_*.json`` perf-trajectory
-files at the repo root record.
+files at the repo root record. Rows named ``*/model_error`` (modeled vs
+measured ratio per workload) are additionally lifted into a structured
+``model_error`` section of the payload — the input to check_bench's
+model-honesty gate. ``--trace OUT.json`` enables :mod:`repro.obs` for
+the whole run and writes the Chrome trace + telemetry snapshot.
 """
 from __future__ import annotations
 
@@ -29,7 +33,14 @@ def main() -> None:
                          "-m tier1` as the quick tier-1 smoke entry point)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows + metadata as JSON")
+    ap.add_argument("--trace", default=None, metavar="TRACE.json",
+                    help="enable repro.obs telemetry for the whole run and "
+                         "write the Chrome trace (chrome://tracing) here; "
+                         "--json payloads gain a telemetry snapshot")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable(sync=True)
     if args.smoke and args.only:
         ap.error("--smoke and --only are mutually exclusive")
     want = set(args.only.split(",")) if args.only else None
@@ -75,6 +86,11 @@ def main() -> None:
             collected.append(
                 {"name": name, "us": round(float(us), 2),
                  "derived": str(derived)})
+    if args.trace:
+        from repro import obs
+        obs.export_trace(args.trace)
+        print(f"# wrote {len(obs.events())} trace events to {args.trace}",
+              file=sys.stderr)
     if args.json:
         import jax
         import numpy as np
@@ -89,12 +105,35 @@ def main() -> None:
                 "backend": jax.default_backend(),
             },
             "rows": collected,
+            # modeled-vs-measured accounting per workload: the input to
+            # check_bench's model-honesty gate
+            "model_error": _model_error_section(collected),
         }
+        if args.trace:
+            from repro import obs
+            payload["telemetry"] = obs.snapshot()
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
             f.write("\n")
         print(f"# wrote {len(collected)} rows to {args.json}",
               file=sys.stderr)
+
+
+def _model_error_section(rows: list) -> list:
+    """Lift ``*/model_error`` rows into structured records."""
+    out = []
+    for row in rows:
+        if not row["name"].endswith("/model_error"):
+            continue
+        rec = {"workload": row["name"].rsplit("/", 1)[0]}
+        for part in row["derived"].split(";"):
+            k, _, v = part.partition("=")
+            try:
+                rec[k] = float(v)
+            except ValueError:
+                rec[k] = v
+        out.append(rec)
+    return out
 
 
 if __name__ == "__main__":

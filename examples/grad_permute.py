@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.combinators import (compile_expr, geom_cache_info,
+from repro.combinators import (cache_stats, compile_expr,
                                inverse_program, vocab as V)
 from repro.core.bmmc import Bmmc
 from repro.models.permute import PermuteLayer
@@ -58,11 +58,11 @@ def main():
 
     # 4. Batch scaling is free: the tile-geometry cache has the same
     #    entries no matter the batch size.
-    before = geom_cache_info().currsize
+    before = cache_stats()["geom"].currsize
     for b in (2, 8, 32):
         f(jnp.tile(x, (b, 1)), batched=True)
     print("geometry cache entries before/after batches:",
-          before, "->", geom_cache_info().currsize)
+          before, "->", cache_stats()["geom"].currsize)
 
 
 if __name__ == "__main__":

@@ -19,9 +19,9 @@ from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
 from .optimize import (FusedStage, cluster, expand_clusters, fold_free, fuse,
                        inverse_program, lower, num_perm_stages, optimize,
                        program_cost)
-from .execute import (CompiledExpr, clear_caches, compile_expr, engines,
-                      fused_apply, geom_cache_info, get_engine, perm_apply,
-                      program_cache_info, register_engine, run_program)
+from .execute import (CompiledExpr, cache_stats, clear_caches, compile_expr,
+                      engines, fused_apply, get_engine, perm_apply,
+                      register_engine, run_program)
 from . import vocab
 from .sort import compiled_sort, sort_expr
 # NB: the fft *function* stays in .fft to avoid shadowing the submodule
@@ -32,9 +32,8 @@ __all__ = [
     "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
     "Perm", "Seq", "Two", "seq", "FusedStage", "cluster", "expand_clusters",
     "fold_free", "fuse", "inverse_program", "lower", "num_perm_stages",
-    "optimize", "program_cost", "CompiledExpr", "clear_caches",
-    "compile_expr", "engines", "fused_apply", "geom_cache_info",
-    "get_engine", "perm_apply", "program_cache_info", "register_engine",
-    "run_program", "vocab", "compiled_sort", "sort_expr",
-    "compiled_fft", "fft_expr",
+    "optimize", "program_cost", "CompiledExpr", "cache_stats",
+    "clear_caches", "compile_expr", "engines", "fused_apply",
+    "get_engine", "perm_apply", "register_engine", "run_program",
+    "vocab", "compiled_sort", "sort_expr", "compiled_fft", "fft_expr",
 ]

@@ -53,8 +53,10 @@ back to stage-at-a-time execution.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import inspect
+import time
 import weakref
 from typing import Callable, Dict, Optional, Sequence, Union
 
@@ -63,14 +65,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bmmc import Bmmc
+from ..obs import metrics as _ometrics
+from ..obs import trace as _otrace
 from ..core.tiling import compute_tables, plan_bmmc, plan_general
 from ..kernels import ref as _ref
 from ..kernels.bmmc_permute import (block_geometry, block_permute_tables,
                                     lane_geometry, lane_permute_tables,
                                     plan_geometry, tiled_permute_tables)
 from .ir import Bfly, CmpHalves, Expr, Map, Perm
-from .optimize import (Program, FusedStage, cluster, fold_free, lower, fuse,
-                       inverse_program)
+from .optimize import (COMPUTES, Program, FusedStage, cluster, fold_free,
+                       lower, fuse, inverse_program)
 
 EngineFn = Callable[[jax.Array, Bmmc], jax.Array]
 
@@ -114,11 +118,6 @@ def _geom_executable(geometry: tuple, interpret: bool, batched: bool = False,
         batched=batched, epilogue=epilogue, map_fns=map_fns))
 
 
-def geom_cache_info():
-    """The geometry-executable cache stats (hits/misses/currsize)."""
-    return _geom_executable.cache_info()
-
-
 @functools.lru_cache(maxsize=256)
 def _block_executable(geometry: tuple, interpret: bool,
                       batched: bool = False):
@@ -144,6 +143,7 @@ def _pallas_engine(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
     from ..kernels import ops
 
     if bmmc.is_identity_perm():
+        _ometrics.inc("dispatch.kernel", kernel="none")
         return x
     if jnp.iscomplexobj(x):
         # pallas TPU has no complex dtype; a permutation is dtype-agnostic,
@@ -288,7 +288,20 @@ def _fused_forward(x, fs, engine, batched):
     if engine == "pallas":
         t = _fused_tile(x, fs, batched)
         if t is not None:
+            if _otrace._state.enabled:
+                plans, _ = _fused_plan_cached(fs, t)
+                _ometrics.inc("dispatch.kernel", kernel="fused")
+                _ometrics.inc("model.round_trips", len(plans))
+                _ometrics.inc("dma.descriptors",
+                              sum(p.dma_descriptors() for p in plans))
+                with _otrace.span("kernel.fused", stages=len(fs.stages),
+                                  passes=len(plans), t=t):
+                    return _fused_pallas(x, fs, t, batched=batched)
             return _fused_pallas(x, fs, t, batched=batched)
+    if engine == "pallas":
+        # cluster validated at plan time but re-rejected for this input
+        # (dtype/shape/tile mismatch): the honest count the model lacks
+        _ometrics.inc("dispatch.fused_fallback")
     return run_program(fs.stages, x, engine, batched=batched)
 
 
@@ -411,6 +424,27 @@ def _apply_bfly(x: jax.Array, twiddles: tuple, axis: int = 0) -> jax.Array:
     return jnp.concatenate([lo + t, lo - t], axis=axis)
 
 
+def _exec_stage(s: Expr, x: jax.Array, engine, batched: bool,
+                axis: int) -> jax.Array:
+    """Dispatch ONE primitive/fused stage (the run_program loop body)."""
+    if isinstance(s, Perm):
+        return perm_apply(x, s.bmmc, engine, batched)
+    if isinstance(s, FusedStage):
+        return fused_apply(x, s, engine, batched)
+    if isinstance(s, CmpHalves):
+        h = x.shape[axis] // 2
+        lo = jax.lax.slice_in_dim(x, 0, h, axis=axis)
+        hi = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
+        return jnp.concatenate([jnp.minimum(lo, hi), jnp.maximum(lo, hi)],
+                               axis=axis)
+    if isinstance(s, Bfly):
+        return _apply_bfly(x, s.twiddles, axis)
+    if isinstance(s, Map):
+        return s.fn(x)
+    raise TypeError(f"non-primitive stage {type(s).__name__}; "
+                    "lower() the expression first")
+
+
 def run_program(program: Sequence[Expr], x: jax.Array,
                 engine: Union[str, EngineFn, None] = None,
                 *, batched: bool = False) -> jax.Array:
@@ -419,27 +453,27 @@ def run_program(program: Sequence[Expr], x: jax.Array,
     Differentiable: ``Perm`` stages go through :func:`perm_apply` (offline
     -inverted backward pass), the rest are plain jnp. ``batched=True``
     moves the permuted axis to axis 1, with a leading batch dim.
+
+    When telemetry is enabled each stage records a ``stage.*`` span and
+    standalone computes count as ``sweep`` kernel dispatches (matching
+    :func:`repro.combinators.optimize.program_cost`); the check is one
+    module attribute, so the disabled path is the plain loop below.
     """
     get_engine(engine)  # validate the name up front, even for Perm-free
     axis = 1 if batched else 0
+    if not _otrace._state.enabled:
+        for s in program:
+            x = _exec_stage(s, x, engine, batched, axis)
+        return x
     for s in program:
-        if isinstance(s, Perm):
-            x = perm_apply(x, s.bmmc, engine, batched)
-        elif isinstance(s, FusedStage):
-            x = fused_apply(x, s, engine, batched)
-        elif isinstance(s, CmpHalves):
-            h = x.shape[axis] // 2
-            lo = jax.lax.slice_in_dim(x, 0, h, axis=axis)
-            hi = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
-            x = jnp.concatenate([jnp.minimum(lo, hi), jnp.maximum(lo, hi)],
-                                axis=axis)
-        elif isinstance(s, Bfly):
-            x = _apply_bfly(x, s.twiddles, axis)
-        elif isinstance(s, Map):
-            x = s.fn(x)
-        else:
-            raise TypeError(f"non-primitive stage {type(s).__name__}; "
-                            "lower() the expression first")
+        kind = type(s).__name__.lower()
+        with _otrace.span("stage." + kind):
+            x = _exec_stage(s, x, engine, batched, axis)
+        if isinstance(s, COMPUTES):
+            # a standalone compute pays one full elementwise HBM sweep —
+            # the same unit program_cost charges it
+            _ometrics.inc("dispatch.kernel", kernel="sweep")
+            _ometrics.inc("model.round_trips", 1)
     return x
 
 
@@ -490,9 +524,50 @@ def _program_executable(prog: Program, engine: str, batched: bool):
     return jax.jit(run)
 
 
-def program_cache_info():
-    """The whole-program executable cache stats (hits/misses/currsize)."""
-    return _program_executable.cache_info()
+@functools.lru_cache(maxsize=512)
+def _program_round_trips(prog: Program, t: Optional[int]) -> Optional[int]:
+    """Modeled HBM round trips of a resolved program — the per-call
+    model-vs-measured accounting unit (telemetry only)."""
+    if t is None:
+        return None
+    from .optimize import program_cost
+    return program_cost(prog, t)["round_trips"]
+
+
+CacheStats = collections.namedtuple(
+    "CacheStats", ["hits", "misses", "maxsize", "currsize"])
+
+
+def cache_stats() -> Dict[str, CacheStats]:
+    """Aggregate stats for EVERY executor/ops cache, by name.
+
+    Covers the kernel-executable caches (``geom`` / ``block`` / ``lane``
+    / ``program``), the plan/table caches (``fused_plan`` / ``w_planar``
+    / ``lowered`` / ``clustered`` / ``model_round_trips`` and the ops
+    ``plans`` / ``class_plan``), and the ``compiled_exprs`` memo.
+    Replaces the old single-cache ``geom_cache_info`` /
+    ``program_cache_info`` pair, which made every other cache invisible.
+    """
+    from ..kernels import ops
+
+    out = {
+        "geom": _geom_executable,
+        "block": _block_executable,
+        "lane": _lane_executable,
+        "program": _program_executable,
+        "fused_plan": _fused_plan_cached,
+        "w_planar": _w_planar_cached,
+        "lowered": _lowered_cached,
+        "clustered": _clustered_cached,
+        "model_round_trips": _program_round_trips,
+        "plans": ops._plans_cached,
+        "class_plan": ops._class_plan_cached,
+    }
+    stats = {name: CacheStats(*fn.cache_info()) for name, fn in out.items()}
+    stats["compiled_exprs"] = CacheStats(
+        hits=_compiled_stats["hits"], misses=_compiled_stats["misses"],
+        maxsize=None, currsize=len(_COMPILED))
+    return stats
 
 
 class CompiledExpr:
@@ -544,7 +619,8 @@ class CompiledExpr:
         inv = seq(*self.vjp_program(n))
         return compile_expr(inv, engine=self.engine, optimize=self.optimized)
 
-    def _resolve_program(self, x: jax.Array, batched: bool) -> Program:
+    def _resolve(self, x: jax.Array, batched: bool) -> tuple:
+        """(program, tile parameter) the executor will run on ``x``."""
         axis = 1 if batched else 0
         if x.ndim <= axis:
             what = ("a leading batch dim plus the permuted axis" if batched
@@ -554,29 +630,71 @@ class CompiledExpr:
         if (1 << n) != x.shape[axis]:
             raise ValueError(
                 f"array length {x.shape[axis]} is not a power of 2")
+        from ..kernels.ops import choose_tile
+        d = x.shape[axis + 1] if x.ndim == axis + 2 else 1
+        t = choose_tile(n, x.dtype.itemsize, d)
         prog = self.program(n)
-        if self.engine == "pallas" and self.optimized:
+        if self.engine == "pallas" and self.optimized and t is not None:
             # megakernel clustering + free-stage folding; the ref oracle
             # and injected engines stay stage-at-a-time
-            from ..kernels.ops import choose_tile
-            d = x.shape[axis + 1] if x.ndim == axis + 2 else 1
-            t = choose_tile(n, x.dtype.itemsize, d)
-            if t is not None:
-                prog = self.clustered_program(n, t)
-        return prog
+            prog = self.clustered_program(n, t)
+        return prog, t
+
+    def _resolve_program(self, x: jax.Array, batched: bool) -> Program:
+        return self._resolve(x, batched)[0]
 
     def __call__(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
-        prog = self._resolve_program(x, batched)
-        if isinstance(self.engine, str) and not _has_map(prog):
-            # whole-program compiled executable: one XLA dispatch per
-            # call, per-stage Python enumeration only at trace time.
-            # Programs carrying user Map callables stay on the eager
-            # per-stage path: Map's contract says "a jax function", but
-            # eager execution historically tolerated trace-unsafe fns
-            # (concrete-value branching, numpy round trips) and wrapping
-            # them in jit would turn that tolerance into a crash.
-            return _program_executable(prog, self.engine, batched)(x)
-        return run_program(prog, x, self.engine, batched=batched)
+        prog, t = self._resolve(x, batched)
+        use_exec = isinstance(self.engine, str) and not _has_map(prog)
+        # Programs carrying user Map callables stay on the eager
+        # per-stage path: Map's contract says "a jax function", but
+        # eager execution historically tolerated trace-unsafe fns
+        # (concrete-value branching, numpy round trips) and wrapping
+        # them in jit would turn that tolerance into a crash.
+        if not _otrace._state.enabled:
+            if use_exec:
+                # whole-program compiled executable: one XLA dispatch per
+                # call, per-stage Python enumeration only at trace time
+                return _program_executable(prog, self.engine, batched)(x)
+            return run_program(prog, x, self.engine, batched=batched)
+        return self._call_observed(prog, t, x, batched, use_exec)
+
+    def _call_observed(self, prog: Program, t: Optional[int], x: jax.Array,
+                       batched: bool, use_exec: bool) -> jax.Array:
+        """The telemetry-enabled call path: one ``program.call`` span +
+        latency histogram per invocation, warm/cold labeled by whether a
+        fresh jit trace ran, and the modeled round trips accumulated so
+        ``obs.model_vs_measured()`` can hold the transaction model
+        against the wall clock. Blocks on the result only when
+        ``obs.enable(sync=True)`` asked for end-to-end timings."""
+        eng = self.engine if isinstance(self.engine, str) else "injected"
+        with _otrace.span("program.call", engine=eng, stages=len(prog),
+                          path="executable" if use_exec else "per-stage",
+                          batched=batched) as sargs:
+            t0 = time.perf_counter_ns()
+            if use_exec:
+                misses0 = _program_executable.cache_info().misses
+                out = _program_executable(prog, self.engine, batched)(x)
+                cold = _program_executable.cache_info().misses > misses0
+            else:
+                out = run_program(prog, x, self.engine, batched=batched)
+                cold = False
+            if _otrace._state.sync:
+                jax.block_until_ready(out)
+            dur_us = (time.perf_counter_ns() - t0) / 1e3
+            rt = _program_round_trips(prog, t)
+            sargs["dur_us"] = round(dur_us, 1)
+            sargs["cache"] = "cold" if cold else "warm"
+            if rt is not None:
+                sargs["model_round_trips"] = rt
+        _ometrics.observe("program.call_us", dur_us, engine=eng,
+                          cache="cold" if cold else "warm")
+        if rt is not None:
+            _ometrics.inc("program.model_round_trips", rt)
+            if not cold:
+                _ometrics.observe("program.us_per_round_trip",
+                                  dur_us / max(rt, 1), engine=eng)
+        return out
 
     def call_per_stage(self, x: jax.Array, *,
                        batched: bool = False) -> jax.Array:
@@ -588,10 +706,13 @@ class CompiledExpr:
 
 
 _COMPILED: Dict[tuple, CompiledExpr] = {}
+_compiled_stats = {"hits": 0, "misses": 0}
 
 
 def clear_caches() -> None:
-    """Drop every compiled artifact the executor pins.
+    """Drop every compiled artifact the executor pins, and reset the
+    telemetry counters/spans with them (cache hygiene: hit/miss counts
+    and dispatch counters describe the caches being dropped).
 
     The geometry / block / lane / whole-program executable caches hold
     jitted pallas executables (each pinning a traced kernel),
@@ -602,6 +723,7 @@ def clear_caches() -> None:
     flat.
     """
     from ..kernels import ops
+    from .. import obs
 
     _geom_executable.cache_clear()
     _block_executable.cache_clear()
@@ -611,9 +733,12 @@ def clear_caches() -> None:
     _w_planar_cached.cache_clear()
     _lowered_cached.cache_clear()
     _clustered_cached.cache_clear()
+    _program_round_trips.cache_clear()
     _COMPILED.clear()
+    _compiled_stats["hits"] = _compiled_stats["misses"] = 0
     ops._plans_cached.cache_clear()
     ops._class_plan_cached.cache_clear()
+    obs.reset()
 
 
 def compile_expr(expr: Expr, *, engine: Union[str, EngineFn] = "pallas",
@@ -627,5 +752,8 @@ def compile_expr(expr: Expr, *, engine: Union[str, EngineFn] = "pallas",
     key = (expr, engine if isinstance(engine, str) else id(engine), optimize)
     got = _COMPILED.get(key)
     if got is None:
+        _compiled_stats["misses"] += 1
         got = _COMPILED[key] = CompiledExpr(expr, engine, optimize)
+    else:
+        _compiled_stats["hits"] += 1
     return got

@@ -44,6 +44,7 @@ from ..core import f2
 from ..core.bmmc import Bmmc
 from ..core.parm import parm_matrix
 from ..core.tiling import pairing_vector, pass_spans
+from ..obs import metrics as _ometrics
 from .ir import (Bfly, CmpHalves, Expr, Id, Ilv, Map, ParmE, Perm, Seq, Two,
                  PRIMITIVES)
 
@@ -258,6 +259,10 @@ def cluster(program: Sequence[Expr], n: int,
             out.append(s)
             i += 1
         else:
+            # telemetry: planner decisions, recorded at plan time (the
+            # clustered-program cache makes this once per (expr, n, t))
+            _ometrics.inc("optimize.clusters")
+            _ometrics.inc("optimize.cluster_stages_absorbed", len(run))
             out.append(_run_fused(run, n))
             i = j
     return tuple(out)
@@ -317,6 +322,8 @@ def fold_free(program: Sequence[Expr], n: int,
                 if _run_valid(merged, n, t):
                     lo, hi = min(i, j), max(i, j)
                     prog[lo:hi + 1] = [_run_fused(merged, n)]
+                    _ometrics.inc("optimize.fold_free_folds",
+                                  cls=s.bmmc.bmmc_class(t))
                     changed = True
                     break
             if changed:

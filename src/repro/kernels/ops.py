@@ -30,6 +30,8 @@ import numpy as np
 from ..core.bmmc import Bmmc
 from ..core.tiling import (class_stats, copy_descriptors, dispatch_kernel,
                            plan_block, plan_bmmc, plan_lane)
+from ..obs import metrics as _ometrics
+from ..obs import trace as _otrace
 from . import ref as _ref
 from .bmmc_permute import block_permute, lane_permute, tiled_permute
 
@@ -98,11 +100,29 @@ def class_dispatch(x: jax.Array, bmmc: Bmmc, t: Optional[int],
                    batched: bool) -> Optional[tuple]:
     """The full class-dispatch decision for this array: ``(kernel,
     payload)``, or None when the array is too small to tile (callers
-    fall back to the reference gather)."""
+    fall back to the reference gather).
+
+    This is the executor stack's single dispatch-decision choke point,
+    so telemetry hangs here: one ``kernel.dispatch`` span plus the
+    per-kernel / per-class counters and the modeled descriptor /
+    round-trip totals — recorded at dispatch/trace time, from offline
+    plans, with no device interaction."""
     lead = 1 if batched else 0
     d = x.shape[1 + lead] if x.ndim == 2 + lead else 1
     teff = choose_tile(bmmc.n, x.dtype.itemsize, d, t)
-    return None if teff is None else class_plan(bmmc, teff)
+    if teff is None:
+        return None
+    if not _otrace._state.enabled:
+        return class_plan(bmmc, teff)
+    with _otrace.span("kernel.dispatch", n=bmmc.n, t=teff) as sargs:
+        got = class_plan(bmmc, teff)
+        sargs["kernel"] = got[0]
+        _ometrics.inc("dispatch.kernel", kernel=got[0])
+        _ometrics.inc("dispatch.class", cls=bmmc.bmmc_class(teff))
+        tx = modeled_transactions(bmmc, teff, x.dtype.itemsize)
+        _ometrics.inc("dma.descriptors", tx["descriptors"])
+        _ometrics.inc("model.round_trips", tx["passes"])
+    return got
 
 
 def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
@@ -119,6 +139,7 @@ def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
     if engine == "ref":
         return _ref.bmmc_ref(x, bmmc, batched=batched)
     if bmmc.is_identity_perm():
+        _ometrics.inc("dispatch.kernel", kernel="none")
         return x
     got = class_dispatch(x, bmmc, t, batched)
     if got is None:

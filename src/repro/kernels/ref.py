@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bmmc import Bmmc
+from ..obs import metrics as _ometrics
 
 
 def bmmc_indices(bmmc: Bmmc) -> np.ndarray:
@@ -39,6 +40,7 @@ def bmmc_ref(x: jax.Array, bmmc: Bmmc, *, batched: bool = False) -> jax.Array:
     """
     axis = 1 if batched else 0
     assert x.shape[axis] == bmmc.size, (x.shape, bmmc.n)
+    _ometrics.inc("dispatch.kernel", kernel="ref")
     return jnp.take(x, jnp.asarray(_src_table(bmmc.rows, bmmc.c)), axis=axis)
 
 

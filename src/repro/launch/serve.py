@@ -3,6 +3,13 @@
 Usage::
 
     python -m repro.launch.serve --arch mistral-nemo-12b --tokens 32
+
+``--telemetry`` enables :mod:`repro.obs`: per-request (= per decode
+step) latency histograms labeled warm/cold — the first decode call pays
+the jit compile, and lumping it in with steady-state latency hid every
+warm-path regression — plus the executor's dispatch counters, rendered
+with ``obs.report()`` at exit. ``--trace OUT.json`` additionally writes
+the Chrome trace.
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs import get_config, reduce_for_smoke
 from ..models import model as M
 from ..models.layers import init_params
@@ -25,7 +33,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record+print repro.obs latency/dispatch report")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a chrome://tracing span export (implies "
+                         "--telemetry)")
     args = ap.parse_args(argv)
+    if args.telemetry or args.trace:
+        obs.enable(sync=True)
 
     cfg = reduce_for_smoke(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
@@ -40,10 +55,17 @@ def main(argv=None):
                                                cfg.d_model), cfg.dtype)
 
     t0 = time.time()
-    logits, caches = M.prefill(cfg, params, batch)
+    with obs.span("serve.prefill", batch=args.batch,
+                  prompt_len=args.prompt_len):
+        logits, caches = M.prefill(cfg, params, batch)
+        if obs.sync_enabled():
+            jax.block_until_ready(logits)
     # grow caches to the full decode horizon
     caches = M.grow_caches(caches, args.prompt_len, total)
     prefill_s = time.time() - t0
+    if obs.enabled():
+        obs.observe("serve.request_us", prefill_s * 1e6, phase="prefill",
+                    cache="cold")
 
     decode = jax.jit(
         lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos),
@@ -53,8 +75,20 @@ def main(argv=None):
     out_tokens = [tok]
     t1 = time.time()
     for i in range(args.tokens - 1):
-        logits, caches = decode(params, caches, tok,
-                                jnp.int32(args.prompt_len + i))
+        with obs.span("serve.decode_step", step=i,
+                      cache="cold" if i == 0 else "warm"):
+            tr = time.perf_counter_ns()
+            logits, caches = decode(params, caches, tok,
+                                    jnp.int32(args.prompt_len + i))
+            if obs.sync_enabled():
+                jax.block_until_ready(logits)
+            if obs.enabled():
+                # the first decode call carries the jit trace+compile;
+                # label it cold so warm-path latency stays readable
+                obs.observe("serve.request_us",
+                            (time.perf_counter_ns() - tr) / 1e3,
+                            phase="decode",
+                            cache="cold" if i == 0 else "warm")
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     decode_s = time.time() - t1
@@ -64,6 +98,10 @@ def main(argv=None):
     print(f"decode:  {args.tokens} tokens in {decode_s:.2f}s "
           f"({args.batch * args.tokens / max(decode_s, 1e-9):.1f} tok/s)")
     print("generated ids (first row):", gen[0][:16])
+    if args.trace:
+        print(f"trace written to {obs.export_trace(args.trace)}")
+    if obs.enabled():
+        print(obs.report())
     return gen
 
 

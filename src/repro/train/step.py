@@ -8,18 +8,72 @@ microbatch regardless of global batch.
 (loss, parts_dict)`` — e.g. a loss routed through a
 :class:`repro.models.permute.PermuteLayer`, so ``jax.grad`` exercises
 the pallas BMMC custom VJP inside a full (grads + AdamW) training step.
+
+Telemetry (:mod:`repro.obs`, when enabled): each *eager* step call
+records a ``train.step`` span, a ``train.step_us`` latency histogram
+entry, and the permute share of the step — the modeled permutation
+round trips dispatched while the step traced plus the fraction of step
+wall-clock spent in ``program.call`` permute executions. Callers that
+``jax.jit`` the returned function still get the trace-time dispatch
+counters (they fire while the jaxpr is built); the wall-clock pieces
+are skipped under tracing, never measured wrong.
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs.base import ArchConfig
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update, state_shapes
+
+
+def _trace_state_clean() -> bool:
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # pragma: no cover - older/newer jax
+        return True
+
+
+def _instrument_step(train_step: Callable) -> Callable:
+    """Wrap a step fn with per-step telemetry; transparent when obs is
+    disabled (one attribute check) or when the wrapper itself is being
+    jit-traced (timing a trace is not timing a step)."""
+
+    @functools.wraps(train_step)
+    def observed(params, opt_state, batch):
+        if not (obs.enabled() and _trace_state_clean()):
+            return train_step(params, opt_state, batch)
+        rt0 = obs.counter_total("model.round_trips")
+        perm0 = sum(s["sum"] for (nm, _), s in obs.histograms().items()
+                    if nm == "program.call_us")
+        with obs.span("train.step") as sargs:
+            t0 = time.perf_counter_ns()
+            out = train_step(params, opt_state, batch)
+            if obs.sync_enabled():
+                jax.block_until_ready(out)
+            dur_us = (time.perf_counter_ns() - t0) / 1e3
+            sargs["dur_us"] = round(dur_us, 1)
+        obs.observe("train.step_us", dur_us)
+        rt = obs.counter_total("model.round_trips") - rt0
+        if rt:  # permute stages traced/dispatched inside this step
+            obs.inc("train.permute_round_trips", rt)
+        perm_us = sum(s["sum"] for (nm, _), s in obs.histograms().items()
+                      if nm == "program.call_us") - perm0
+        if perm_us and dur_us > 0:
+            # eager CompiledExpr permute calls inside the step: their
+            # measured share of the step wall clock
+            obs.observe("train.permute_share", perm_us / dur_us)
+        return out
+
+    return observed
+
+
 def make_train_step(cfg: ArchConfig, mesh=None,
                     opt_cfg: Optional[AdamWConfig] = None,
                     grad_accum: int = 1,
@@ -68,7 +122,7 @@ def make_train_step(cfg: ArchConfig, mesh=None,
                        for g in jax.tree.leaves(grads)))}
         return new_params, new_state, metrics
 
-    return train_step, opt_cfg
+    return _instrument_step(train_step), opt_cfg
 
 
 def init_opt(cfg: ArchConfig, params, opt_cfg: Optional[AdamWConfig] = None):

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 from _hyp_compat import given, settings, strategies as st
 
-from repro.combinators import clear_caches, compile_expr, geom_cache_info
+from repro.combinators import cache_stats, clear_caches, compile_expr
 from repro.combinators import vocab as V
 from repro.core.bmmc import Bmmc
 from repro.kernels.ops import bmmc_permute
@@ -111,10 +111,10 @@ def test_geometry_cache_constant_in_batch():
     e = V.bit_reverse(n) >> V.perm(Bmmc.random(n, random.Random(3)))
     f = compile_expr(e, engine="pallas")
     f(_payload((2, 1 << n), jnp.float32, 0), batched=True)  # warm
-    before = geom_cache_info()
+    before = cache_stats()["geom"]
     for bsz in (3, 4, 8, 16):
         f(_payload((bsz, 1 << n), jnp.float32, bsz), batched=True)
-    after = geom_cache_info()
+    after = cache_stats()["geom"]
     assert after.misses == before.misses, (before, after)
     assert after.currsize == before.currsize
 

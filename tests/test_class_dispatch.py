@@ -24,8 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.combinators import (clear_caches, cluster, compile_expr,
-                               expand_clusters, fold_free, program_cache_info,
+from repro.combinators import (cache_stats, clear_caches, cluster,
+                               compile_expr, expand_clusters, fold_free,
                                program_cost, vocab as V)
 from repro.combinators.ir import CmpHalves, Perm
 from repro.core.bmmc import Bmmc
@@ -330,18 +330,18 @@ def test_program_and_class_caches_clear_and_ignore_batch_size():
     e = V.bit_reverse(n) >> V.perm(Bmmc.random(n, random.Random(3)))
     f = compile_expr(e, engine="pallas")
     f(_payload((2, 1 << n), jnp.float32, 0), batched=True)   # warm
-    before_prog = program_cache_info()
-    before_class = ops._class_plan_cached.cache_info()
+    before_prog = cache_stats()["program"]
+    before_class = cache_stats()["class_plan"]
     assert before_prog.currsize > 0
     for bsz in (3, 4, 8, 16):
         f(_payload((bsz, 1 << n), jnp.float32, bsz), batched=True)
-    after_prog = program_cache_info()
-    after_class = ops._class_plan_cached.cache_info()
+    after_prog = cache_stats()["program"]
+    after_class = cache_stats()["class_plan"]
     assert after_prog.misses == before_prog.misses
     assert after_prog.currsize == before_prog.currsize
     assert after_class.currsize == before_class.currsize
     clear_caches()
-    assert program_cache_info().currsize == 0
+    assert cache_stats()["program"].currsize == 0
     assert ops._class_plan_cached.cache_info().currsize == 0
 
 

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.combinators import (FusedStage, clear_caches, cluster,
-                               compile_expr, expand_clusters, geom_cache_info,
+from repro.combinators import (FusedStage, cache_stats, clear_caches, cluster,
+                               compile_expr, expand_clusters,
                                program_cost, run_program, vocab as V)
 from repro.combinators.fft import compiled_fft, fft_expr, to_planar
 from repro.combinators.optimize import optimize
@@ -279,6 +279,6 @@ def test_clear_caches_drops_executables():
     n = 6
     f = compile_expr(V.riffle(n) >> V.bit_reverse(n), engine="pallas")
     f(_payload((1 << n,), jnp.float32, 0))
-    assert geom_cache_info().currsize > 0
+    assert cache_stats()["geom"].currsize > 0
     clear_caches()
-    assert geom_cache_info().currsize == 0
+    assert cache_stats()["geom"].currsize == 0

@@ -1,0 +1,222 @@
+"""Telemetry subsystem tests (DESIGN.md §12).
+
+Pins the contracts of the :mod:`repro.obs` layer:
+
+* spans nest (parent/depth recorded) and survive a Chrome-trace export
+  round trip as valid ``ph: "X"`` events;
+* the dispatch counters the executor records while tracing a sort
+  program EXACTLY equal the transaction model's
+  ``cost(..., clustered=True)["kernels"]`` counts — the model-honesty
+  acceptance bar, here at 2^8;
+* disabled telemetry records nothing (counters, histograms, spans all
+  empty after an instrumented program runs);
+* counter deltas are independent of the batch size (trace-time
+  recording: the per-class counts describe the program, not the data),
+  and warm same-shape calls add no dispatch counts at all;
+* ``cache_stats()`` covers every executor/ops cache and
+  ``clear_caches()`` resets the telemetry with them.
+"""
+import json
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.combinators import cache_stats, clear_caches, compile_expr
+from repro.combinators import vocab as V
+from repro.combinators.sort import sort_expr
+from repro.core.bmmc import Bmmc
+from repro.kernels.ops import choose_tile
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts disabled with empty buffers and leaves no
+    telemetry state behind for the rest of the suite."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_caches():
+    yield
+    clear_caches()
+
+
+def _payload(shape, seed):
+    vals = np.random.default_rng(seed).normal(size=shape)
+    return jnp.asarray(vals.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Span nesting + Chrome-trace export round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_span_nesting_and_export_roundtrip(tmp_path):
+    obs.enable(sync=False)
+    with obs.span("outer", cat="test", n=8) as oargs:
+        oargs["discovered"] = "late-fact"
+        with obs.span("inner", cat="test"):
+            pass
+    evs = obs.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # exit order
+    inner, outer = evs
+    assert inner["args"]["parent"] == "outer"
+    assert inner["args"]["depth"] == 1
+    assert "parent" not in outer["args"]
+    assert outer["args"]["n"] == 8
+    assert outer["args"]["discovered"] == "late-fact"
+    for ev in evs:
+        assert ev["ph"] == "X" and ev["dur"] >= 0
+
+    path = tmp_path / "roundtrip.trace.json"
+    obs.export_trace(str(path))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded["traceEvents"] == evs
+    assert loaded["displayTimeUnit"] == "ms"
+    assert loaded["otherData"]["dropped"] == 0
+
+
+@pytest.mark.tier1
+def test_span_is_noop_when_disabled():
+    with obs.span("ghost") as args:
+        assert args is None
+    assert obs.events() == []
+
+
+# ---------------------------------------------------------------------------
+# Counter honesty: recorded dispatches == transaction-model counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_sort_counters_match_program_cost():
+    """The acceptance bar: execute the 2^8 sort once with telemetry on;
+    the per-kernel dispatch counters must equal the clustered model's
+    kernel-class counts exactly — same vocabulary, same values."""
+    clear_caches()
+    n = 8
+    t = choose_tile(n, 4, 1)
+    f = compile_expr(sort_expr(n), engine="pallas")
+    want = {k: v for k, v in
+            f.cost(n, t, clustered=True)["kernels"].items() if v}
+    obs.enable(sync=True)
+    jax.block_until_ready(f(_payload((1 << n,), 0)))
+    got = {k: v for k, v in obs.kernel_counts().items() if v}
+    assert got == want, (got, want)
+    # the modeled round trips accumulate alongside
+    assert obs.counter_total("model.round_trips") > 0
+    mm = obs.model_vs_measured()
+    assert mm["program_calls"] == 1
+    assert mm["modeled_round_trips"] > 0
+    assert mm["measured_wall_us"] > 0
+
+
+@pytest.mark.tier1
+def test_report_renders_after_execution():
+    clear_caches()
+    n = 7
+    f = compile_expr(sort_expr(n), engine="pallas")
+    obs.enable(sync=True)
+    jax.block_until_ready(f(_payload((1 << n,), 1)))
+    text = obs.report()
+    assert "kernel dispatches" in text
+    assert "model vs measured" in text
+    assert "caches" in text
+    snap = obs.snapshot()
+    assert snap["kernel_counts"] == obs.kernel_counts()
+    assert snap["trace_events"] == len(obs.events())
+    json.dumps(snap)  # must be JSON-serializable (embedded in --json)
+
+
+# ---------------------------------------------------------------------------
+# Disabled mode is a strict no-op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_disabled_mode_records_nothing():
+    clear_caches()
+    n = 7
+    f = compile_expr(sort_expr(n), engine="pallas")
+    assert not obs.enabled()
+    jax.block_until_ready(f(_payload((1 << n,), 2)))
+    assert obs.counters() == {}
+    assert obs.histograms() == {}
+    assert obs.events() == []
+    assert obs.kernel_counts() == {}
+    # inc/observe are guarded too, not just the executor sites
+    obs.inc("dispatch.kernel", kernel="tiled")
+    obs.observe("program.call_us", 1.0)
+    assert obs.counters() == {} and obs.histograms() == {}
+
+
+# ---------------------------------------------------------------------------
+# Batch-size independence of trace-time counters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_counter_deltas_independent_of_batch_size():
+    """Counters record at trace time, so the dispatch counts describe
+    the PROGRAM: re-tracing the same program for a different batch size
+    yields the identical delta, and warm same-shape calls add nothing."""
+    clear_caches()
+    n = 8
+    e = V.bit_reverse(n) >> V.perm(Bmmc.random(n, random.Random(3)))
+    f = compile_expr(e, engine="pallas")
+    obs.enable(sync=True)
+
+    def delta(bsz, seed):
+        before = obs.kernel_counts()
+        jax.block_until_ready(
+            f(_payload((bsz, 1 << n), seed), batched=True))
+        after = obs.kernel_counts()
+        return {k: v - before.get(k, 0) for k, v in after.items()
+                if v - before.get(k, 0)}
+
+    d2 = delta(2, 10)       # cold: executable traced here
+    d4 = delta(4, 11)       # new shape: jit re-specializes, re-traces
+    assert d2 == d4 and d2, (d2, d4)
+    assert delta(4, 12) == {}   # warm same-shape call: no re-trace
+
+
+# ---------------------------------------------------------------------------
+# Cache hygiene: aggregate stats + telemetry reset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_cache_stats_covers_every_executor_cache():
+    stats = cache_stats()
+    assert {"geom", "block", "lane", "program", "fused_plan", "w_planar",
+            "lowered", "clustered", "model_round_trips", "plans",
+            "class_plan", "compiled_exprs"} <= set(stats)
+    for name, info in stats.items():
+        assert info.hits >= 0 and info.misses >= 0, name
+        assert info.currsize >= 0, name
+    # obs.cache_stats() is the same data as plain dicts
+    assert obs.cache_stats()["program"]["currsize"] == \
+        stats["program"].currsize
+
+
+@pytest.mark.tier1
+def test_clear_caches_resets_telemetry_too():
+    clear_caches()
+    n = 7
+    f = compile_expr(sort_expr(n), engine="pallas")
+    obs.enable(sync=True)
+    jax.block_until_ready(f(_payload((1 << n,), 3)))
+    assert obs.counters() and obs.events()
+    assert cache_stats()["program"].currsize > 0
+    clear_caches()
+    assert obs.counters() == {} and obs.events() == []
+    assert obs.histograms() == {}
+    for name in ("geom", "block", "lane", "program", "fused_plan",
+                 "clustered", "model_round_trips", "class_plan"):
+        assert cache_stats()[name].currsize == 0, name
+    assert obs.enabled()    # reset drops data, not the enabled flag
