@@ -1,11 +1,20 @@
 """Autodiff overhead: fwd vs fwd+bwd µs/call for fused combinator programs.
 
 The backward pass of a permutation program is the offline-inverted
-program (DESIGN.md §9), so fwd+bwd should cost ~2x fwd in permutation
-passes — not the gather-transpose blowup a generic autodiff would pay.
-This table reports wall-clock per call on both engines (interpret-mode
-pallas; see §7.4 on clocks) plus the modeled pass counts of the forward
-and VJP programs, batched and unbatched.
+program (DESIGN.md §9/§13), and the backward of a compute-bearing
+program is the COLLAPSED plan — every transposed pairwise compute
+conjugated into forward-output coordinates plus at most ONE composed
+inverse BMMC pass — so fwd+bwd should cost ~2x fwd, not the per-stage
+replay blowup a generic autodiff would pay. This table reports
+wall-clock per call on both engines (interpret-mode pallas; see §7.4 on
+clocks) plus the modeled pass counts, batched and unbatched.
+
+``*/bwd_telemetry`` rows additionally hold one COLD backward call's
+``model.vjp_round_trips`` counter delta against the compiled backward's
+modeled cost (``CompiledExpr.vjp_round_trips``) and record the
+backward kernel-class histogram next to the forward's — the backward
+honesty gate (DESIGN.md §13), gated by check_bench. These rows carry no
+wall-clock measurement, so their ``us`` field is None.
 """
 from __future__ import annotations
 
@@ -15,20 +24,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.combinators import compile_expr, inverse_program, vocab as V
+from repro import obs
+from repro.combinators import (clear_caches, compile_expr, inverse_program,
+                               is_perm_program, vocab as V)
 from repro.combinators.optimize import num_perm_stages
 from repro.combinators.sort import sort_expr
 from repro.core.bmmc import Bmmc
+from repro.kernels.ops import choose_tile
 
 
 def _timed(fn, *args, reps: int = 8):
     """Min µs/call over ``reps`` calls (min, not mean: interpret-mode
-    timings on a loaded CPU are noisy in one direction only). Callers
-    must warm ``fn`` — and any sibling paths sharing plan/executable
-    caches — BEFORE timing: the first call pays trace+compile plus the
-    shared offline-table caches, and timing it inflated ``fwd_us`` above
-    ``fwdbwd_us`` in BENCH_PR4 (7051.8 vs 2814.1 µs: a warmup artifact,
-    not physics)."""
+    timings on a loaded CPU are noisy in one direction only). The
+    callable is re-warmed with one untimed call immediately before the
+    timed reps — jit caches were populated earlier, but re-warming PER
+    PATH keeps python-side cache-miss tails (weakref probes, dispatch
+    memos touched by a sibling path) out of the first timed rep; BENCH_
+    PR4 and PR6 both recorded ``fwd_us > fwdbwd_us`` artifacts from
+    timing a path straight after warming a *different* one."""
+    jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -47,44 +61,118 @@ def _programs(n):
     )
 
 
+def _measure_pair(fwd, bwd, x, reps: int = 8):
+    """Time a (fwd, fwd+bwd) pair with the bench's own sanity check:
+    a ``jit(value_and_grad(loss))`` call strictly contains the loss's
+    forward work, so ``fwdbwd_us < fwd_us`` can only be measurement
+    noise. (``jit(grad(loss))`` — what BENCH_PR4..PR6 timed — does NOT:
+    XLA dead-code-eliminates the loss reduction the grad never uses,
+    which is exactly how permchain/ref recorded fwd_us=8.6 >
+    fwdbwd_us=7.4.) Violations re-measure once at 4x the reps (tighter
+    mins under a loaded CPU); a persisting violation is a real timing
+    bug and raises."""
+    us_f = _timed(fwd, x, reps=reps)
+    us_fb = _timed(bwd, x, reps=reps)
+    if us_fb < us_f:
+        us_f = _timed(fwd, x, reps=4 * reps)
+        us_fb = _timed(bwd, x, reps=4 * reps)
+    assert us_fb >= us_f, (
+        f"fwd+bwd measured cheaper than fwd ({us_fb:.1f} < {us_f:.1f} µs) "
+        "after re-measure: warmup/timing artifact")
+    return us_f, us_fb
+
+
+def _bwd_telemetry_row(name, n, t, expr, x):
+    """One COLD backward call's counter delta vs the compiled backward's
+    model, plus forward/backward kernel-class histograms (pallas only —
+    the ref engine records no transaction-model counters).
+
+    Counters fire at executable trace time, so "cold" means the
+    executor caches are cleared (same semantics as the forward
+    telemetry gate in class_dispatch.py). The forward histogram is
+    measured from a loss-only call, the backward's is the grad call's
+    delta against it; for a permutation-only program the backward
+    histogram must MIRROR the forward's class for class (the inverse
+    program re-dispatches the same kernel classes), while a collapsed
+    compute-bearing backward dispatches at most the one composed final
+    pass."""
+    f = compile_expr(expr, engine="pallas")
+    modeled = f.vjp_round_trips(n, t)
+    was_enabled = obs.enabled()
+    obs.enable(sync=True)
+    try:
+        clear_caches()
+        obs.reset()
+        jax.block_until_ready(jax.jit(lambda v: jnp.sum(f(v) ** 2))(x))
+        fwd_kernels = obs.kernel_counts()
+        clear_caches()
+        obs.reset()
+        jax.block_until_ready(
+            jax.jit(jax.grad(lambda v: jnp.sum(f(v) ** 2)))(x))
+        delta = int(obs.counter_total("model.vjp_round_trips"))
+        grad_kernels = obs.kernel_counts()
+    finally:
+        if not was_enabled:
+            obs.disable()
+        obs.reset()
+    bwd_kernels = {k: v - fwd_kernels.get(k, 0)
+                   for k, v in grad_kernels.items()
+                   if v - fwd_kernels.get(k, 0)}
+    match = modeled is not None and delta == modeled
+    parts = [f"bwd_counts_match={match}", f"bwd_round_trips={delta}",
+             f"model_bwd_round_trips={modeled}"]
+    if is_perm_program(f.clustered_program(n, t)):
+        # perm-only: the inverse program re-dispatches the same kernel
+        # classes, so the backward histogram must mirror the forward's
+        parts.append(f"bwd_mirrors_fwd={bwd_kernels == fwd_kernels}")
+    parts += [f"fwd_{k}={v}" for k, v in sorted(fwd_kernels.items())]
+    parts += [f"bwd_{k}={v}" for k, v in sorted(bwd_kernels.items())]
+    return (f"autodiff/{name}/2^{n}/bwd_telemetry", None, ";".join(parts))
+
+
 def rows():
     out = []
     n = 8
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=(1 << n,)).astype(np.float32))
     xb = jnp.tile(x, (8, 1))
-    for name, e in _programs(n):
+    progs = _programs(n)
+    for name, e in progs:
         for engine in ("ref", "pallas"):
             f = compile_expr(e, engine=engine)
             prog = f.program(n)
             perms = num_perm_stages(prog)
             try:
                 vjp_perms = num_perm_stages(inverse_program(prog))
-            except TypeError:  # non-perm stages: VJP handled by jax autodiff
+            except TypeError:  # non-perm stages: collapsed/replay backward
                 vjp_perms = perms
             fwd = jax.jit(lambda x: jnp.sum(f(x) ** 2))
-            bwd = jax.jit(jax.grad(lambda x: jnp.sum(f(x) ** 2)))
+            bwd = jax.jit(jax.value_and_grad(lambda x: jnp.sum(f(x) ** 2)))
             fwd_b = jax.jit(lambda x: jnp.sum(f(x, batched=True) ** 2))
-            bwd_b = jax.jit(jax.grad(
+            bwd_b = jax.jit(jax.value_and_grad(
                 lambda x: jnp.sum(f(x, batched=True) ** 2)))
             # warm EVERY path before timing ANY: trace+compile and the
             # shared plan/executable caches must not land in the first
-            # timed row (the PR4 fwd>fwdbwd artifact)
+            # timed row (the PR4 fwd>fwdbwd artifact); _timed re-warms
+            # each callable again right before its own reps
             for wfn, warg in ((fwd, x), (bwd, x), (fwd_b, xb), (bwd_b, xb)):
                 jax.block_until_ready(wfn(warg))
-            us_f = _timed(fwd, x)
-            us_fb = _timed(bwd, x)
-            us_bf = _timed(fwd_b, xb)
-            us_bfb = _timed(bwd_b, xb)
+            us_f, us_fb = _measure_pair(fwd, bwd, x)
+            us_bf, us_bfb = _measure_pair(fwd_b, bwd_b, xb)
             out.append((
                 f"autodiff/{name}/2^{n}/{engine}", us_fb,
                 f"fwd_us={us_f:.1f};fwdbwd_us={us_fb:.1f};"
                 f"batched8_fwd_us={us_bf:.1f};batched8_fwdbwd_us={us_bfb:.1f};"
                 f"fwd_perm_stages={perms};vjp_perm_stages={vjp_perms}",
             ))
+    # telemetry rows last: they clear the executor caches, which would
+    # otherwise make a later timing row repay tracing inside its warmup
+    t = choose_tile(n, 4, 1)
+    for name, e in progs:
+        out.append(_bwd_telemetry_row(name, n, t, e, x))
     return out
 
 
 if __name__ == "__main__":
     for r in rows():
-        print(",".join(str(v) for v in r))
+        print(",".join("" if v is None else str(v) for v in r))

@@ -25,10 +25,22 @@ measured speedup per workload) must not *drift* beyond
 when the model's relationship to the wall clock changes by a factor,
 while ordinary CI machine noise (well under the tolerance) passes.
 
+Backward honesty gate (PR 7): ``*/bwd_telemetry`` rows must report
+``bwd_counts_match=True`` — one cold backward call's recorded
+``model.vjp_round_trips`` counter delta equals the compiled backward's
+modeled cost (``CompiledExpr.vjp_round_trips``) — and their
+``bwd_round_trips`` must not exceed the baseline's (the backward is an
+offline-compiled program, so extra passes are a code regression, not
+noise). Where present, ``bwd_mirrors_fwd`` (permutation-only programs:
+the backward kernel-class histogram mirrors the forward's) must stay
+True.
+
 Other wall-clock rows are reported but never gated (CI machines are
-noisy). Rows missing from the baseline (older recordings) are skipped
-with a note, so the gate tightens automatically as baselines are
-refreshed.
+noisy); rows whose ``us`` is null carry no wall-clock measurement at
+all (model-only/telemetry rows) and are explicitly exempt from any
+timing comparison. Rows missing from the baseline (older recordings)
+are skipped with a note, so the gate tightens automatically as
+baselines are refreshed.
 """
 from __future__ import annotations
 
@@ -41,7 +53,19 @@ import sys
 # it, machine noise too; an order-of-magnitude lie does not
 DRIFT_TOL = 5.0
 
-_GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry")
+_GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry",
+                   "/bwd_telemetry")
+
+
+def _has_timing(row: dict) -> bool:
+    """True when the row carries a real wall-clock measurement.
+
+    Model-only and telemetry rows record ``us: null`` (older baselines:
+    ``0.0``); neither is a measured time, so timing-based comparisons
+    must skip them explicitly rather than treat them as sub-µs calls.
+    """
+    us = row.get("us")
+    return us is not None and float(us) > 0.0
 
 
 def _derived(row: dict) -> dict:
@@ -91,6 +115,37 @@ def check(baseline: dict, current: dict) -> list:
         if name.endswith(_GATED_SUFFIXES) and name not in cur:
             failures.append(f"{name}: gated row missing from current run")
     for name, row in sorted(cur.items()):
+        if name.endswith("/bwd_telemetry"):
+            d = _derived(row)
+            # deterministic: one cold backward call's counter delta
+            # must equal the compiled backward's modeled pass count
+            if d.get("bwd_counts_match") != "True":
+                failures.append(
+                    f"{name}: cold-backward vjp counter delta diverges "
+                    f"from the compiled backward's model "
+                    f"(bwd_counts_match={d.get('bwd_counts_match')}, "
+                    f"bwd_round_trips={d.get('bwd_round_trips')}, "
+                    f"model_bwd_round_trips="
+                    f"{d.get('model_bwd_round_trips')})")
+            if d.get("bwd_mirrors_fwd") not in (None, "True"):
+                failures.append(
+                    f"{name}: permutation-only backward kernel histogram "
+                    "no longer mirrors the forward's "
+                    f"(bwd_mirrors_fwd={d.get('bwd_mirrors_fwd')})")
+            if name in base:
+                bd = _derived(base[name])
+                try:
+                    b_rt = int(bd["bwd_round_trips"])
+                    c_rt = int(d["bwd_round_trips"])
+                except (KeyError, ValueError):
+                    b_rt = c_rt = 0
+                if c_rt > b_rt:
+                    failures.append(
+                        f"{name}: backward round_trips {b_rt} -> {c_rt} "
+                        "(the compiled backward gained passes)")
+            else:
+                skipped.append(name)
+            continue
         if name.endswith("/telemetry"):
             # deterministic counter-vs-model comparison: never True->False
             if _derived(row).get("counts_match") != "True":
@@ -136,6 +191,19 @@ def check(baseline: dict, current: dict) -> list:
             if float(cd["roofline"]) < float(bd["roofline"]) - 1e-9:
                 failures.append(
                     f"{name}: roofline {bd['roofline']} -> {cd['roofline']}")
+    # wall-clock rows: reported only, never gated — and rows with no
+    # measurement at all (us null / legacy 0.0) are skipped outright so
+    # a model-only row can't masquerade as a sub-µs timing
+    for name, row in sorted(cur.items()):
+        if name not in base:
+            continue
+        if not (_has_timing(row) and _has_timing(base[name])):
+            continue
+        b_us, c_us = float(base[name]["us"]), float(row["us"])
+        if c_us > 3.0 * b_us:
+            print(f"note: {name} wall clock {b_us:.2f} -> {c_us:.2f} µs "
+                  "(reported only; timing rows are never gated)",
+                  file=sys.stderr)
     for name in skipped:
         print(f"note: {name} absent from baseline; skipped", file=sys.stderr)
     return failures

@@ -73,7 +73,7 @@ def rows():
     for name, bmmc in _class_examples(n, t):
         cs = class_stats(bmmc, t)
         out.append((
-            f"classdispatch/{name}/2^{n}/model", 0.0,
+            f"classdispatch/{name}/2^{n}/model", None,
             f"t={t};kernel={cs['kernel']};passes={cs['passes']};"
             f"desc={cs['descriptors']};copy_desc={cs['copy_descriptors']};"
             f"roofline={cs['roofline_ratio']:.3f}",
@@ -89,7 +89,7 @@ def rows():
         cost = f.cost(pn, pt, clustered=True)
         kern = ";".join(f"{k}={v}" for k, v in sorted(cost["kernels"].items()))
         out.append((
-            f"classdispatch/{name}/2^{pn}/program", 0.0,
+            f"classdispatch/{name}/2^{pn}/program", None,
             f"t={pt};round_trips={cost['round_trips']};{kern};"
             f"roofline={cost['roofline_ratio']:.3f}",
         ))
@@ -120,7 +120,7 @@ def rows():
     # just must stay stable)
     rel = measured / stages
     out.append((
-        f"classdispatch/sort/2^{dn}/model_error", 0.0,
+        f"classdispatch/sort/2^{dn}/model_error", None,
         f"modeled_speedup={stages:.2f};measured_speedup={measured:.2f};"
         f"drift={max(rel, 1 / rel):.2f}",
     ))
@@ -154,7 +154,7 @@ def _telemetry_row():
     match = got == {k: v for k, v in want.items() if v}
     counts = ";".join(f"{k}={v}" for k, v in sorted(got.items()))
     return (
-        f"classdispatch/sort/2^{tn}/telemetry", 0.0,
+        f"classdispatch/sort/2^{tn}/telemetry", None,
         f"counts_match={match};{counts};"
         f"model_round_trips={f.cost(tn, tt, clustered=True)['round_trips']}",
     )

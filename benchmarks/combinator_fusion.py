@@ -27,7 +27,7 @@ def rows():
             rc = program_cost(raw, t)
             fc = program_cost(fz, t)
             out.append((
-                f"combinators/{name}/2^{n}", 0.0,
+                f"combinators/{name}/2^{n}", None,
                 f"raw_perms={num_perm_stages(raw)};"
                 f"fused_perms={num_perm_stages(fz)};"
                 f"raw_passes={rc['tiled_passes']};"

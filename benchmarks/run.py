@@ -82,9 +82,15 @@ def main() -> None:
     collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():
-            print(f"{name},{us:.2f},{derived}")
+            # model-only rows (offline transaction counts, telemetry
+            # gates) carry no wall-clock measurement: us is None, the
+            # CSV cell is empty and the JSON field is null so readers
+            # and check_bench can't mistake them for measured 0.00 µs
+            us_cell = "" if us is None else f"{us:.2f}"
+            print(f"{name},{us_cell},{derived}")
             collected.append(
-                {"name": name, "us": round(float(us), 2),
+                {"name": name,
+                 "us": None if us is None else round(float(us), 2),
                  "derived": str(derived)})
     if args.trace:
         from repro import obs

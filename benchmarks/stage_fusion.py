@@ -75,7 +75,7 @@ def rows():
         c1 = program_cost(clustered, t)
         ratio = c0["round_trips"] / max(c1["round_trips"], 1)
         out.append((
-            f"stagefusion/{name}/2^{MODEL_N}/model", 0.0,
+            f"stagefusion/{name}/2^{MODEL_N}/model", None,
             f"t={t};round_trips={c0['round_trips']}->{c1['round_trips']};"
             f"ratio={ratio:.2f};bytes={c0['bytes_moved']}->{c1['bytes_moved']};"
             f"desc={c0['descriptors']}->{c1['descriptors']}",
@@ -113,7 +113,7 @@ def rows():
         modeled = cw0["round_trips"] / max(cw1["round_trips"], 1)
         rel = measured / modeled
         out.append((
-            f"stagefusion/{name}/2^{WALL_N}/model_error", 0.0,
+            f"stagefusion/{name}/2^{WALL_N}/model_error", None,
             f"modeled_speedup={modeled:.2f};measured_speedup={measured:.2f};"
             f"drift={max(rel, 1 / rel):.2f}{note}",
         ))

@@ -17,11 +17,11 @@ Quick tour::
 from .ir import (Bfly, CmpHalves, Compose, Expr, Id, Ilv, Map, ParmE, Perm,
                  Seq, Two, seq)
 from .optimize import (FusedStage, cluster, expand_clusters, fold_free, fuse,
-                       inverse_program, lower, num_perm_stages, optimize,
-                       program_cost)
+                       inverse_program, inverse_stage, is_perm_program,
+                       lower, num_perm_stages, optimize, program_cost)
 from .execute import (CompiledExpr, cache_stats, clear_caches, compile_expr,
                       engines, fused_apply, get_engine, perm_apply,
-                      register_engine, run_program)
+                      program_apply, register_engine, run_program)
 from . import vocab
 from .sort import compiled_sort, sort_expr
 # NB: the fft *function* stays in .fft to avoid shadowing the submodule
@@ -31,9 +31,10 @@ from .fft import compiled_fft, fft_expr
 __all__ = [
     "Bfly", "CmpHalves", "Compose", "Expr", "Id", "Ilv", "Map", "ParmE",
     "Perm", "Seq", "Two", "seq", "FusedStage", "cluster", "expand_clusters",
-    "fold_free", "fuse", "inverse_program", "lower", "num_perm_stages",
-    "optimize", "program_cost", "CompiledExpr", "cache_stats",
-    "clear_caches", "compile_expr", "engines", "fused_apply",
-    "get_engine", "perm_apply", "register_engine", "run_program",
+    "fold_free", "fuse", "inverse_program", "inverse_stage",
+    "is_perm_program", "lower", "num_perm_stages", "optimize",
+    "program_cost", "CompiledExpr", "cache_stats", "clear_caches",
+    "compile_expr", "engines", "fused_apply", "get_engine", "perm_apply",
+    "program_apply", "register_engine", "run_program",
     "vocab", "compiled_sort", "sort_expr", "compiled_fft", "fft_expr",
 ]

@@ -342,26 +342,59 @@ def expand_clusters(program: Sequence[Expr]) -> Program:
     return tuple(out)
 
 
+def is_perm_program(program: Iterable[Expr]) -> bool:
+    """True iff every stage is a ``Perm`` or a compute-free
+    :class:`FusedStage` — the programs with an exact offline inverse
+    (and therefore a fully precompiled backward pass, DESIGN.md §13)."""
+    return all(isinstance(s, Perm)
+               or (isinstance(s, FusedStage) and not s.computes)
+               for s in program)
+
+
+def inverse_stage(s: Expr) -> Expr:
+    """The offline inverse of one permutation stage.
+
+    A ``Perm``'s inverse is the offline F2-inverted BMMC. A compute-free
+    :class:`FusedStage`'s inverse is a FusedStage of the inverted member
+    stages in reverse order — its composed BMMC is ``bmmc.inverse()``,
+    so it dispatches through the same megakernel machinery as the
+    forward cluster (per-class closure: identity / complement / block /
+    lane BMMCs invert within their class, and any invertible BMMC keeps
+    its one-pass plan when ``2t <= n``, DESIGN.md §13). Compute-bearing
+    clusters have no static inverse (``CmpHalves``' adjoint routes by
+    the primal values); their backward is handled by the executor's
+    pulled-back VJP instead (:func:`repro.combinators.execute.
+    fused_apply`).
+    """
+    if isinstance(s, Perm):
+        return Perm(s.bmmc.inverse())
+    if isinstance(s, FusedStage) and not s.computes:
+        return _run_fused(
+            tuple(Perm(st.bmmc.inverse()) for st in reversed(s.stages)),
+            s.bmmc.n)
+    raise TypeError(
+        f"inverse_program needs a permutation-only program; "
+        f"found {type(s).__name__}"
+        + (" with compute stages" if isinstance(s, FusedStage) else ""))
+
+
 def inverse_program(program: Sequence[Expr]) -> Program:
     """The exact inverse of a permutation-only program: stages reversed,
-    each BMMC replaced by its offline F2 inverse.
+    each stage replaced by its offline inverse (``Perm`` → inverted
+    BMMC; compute-free :class:`FusedStage` → the inverted cluster, see
+    :func:`inverse_stage`) — so the inverse of a *clustered* program is
+    itself clustered, mirroring the forward plan stage for stage.
 
     This is also the *VJP program* of the forward program — a BMMC
     permutation matrix is orthogonal over the reals, so its Jacobian
     transpose equals its inverse — which is what lets the executor's
-    backward pass ride the same tiled kernels (DESIGN.md §9). Raises
-    ``TypeError`` on non-``Perm`` stages (``CmpHalves`` is not
-    invertible; ``Bfly``/``Map`` have state-dependent adjoints handled
-    by jax autodiff instead).
+    backward pass ride the same megakernel/class-dispatch executables
+    as the forward (DESIGN.md §9/§13). Raises ``TypeError`` on
+    non-``Perm`` stages (``CmpHalves`` is not invertible; ``Bfly``/
+    ``Map`` have state-dependent adjoints handled by the executor's
+    compute-VJP path instead).
     """
-    out: List[Expr] = []
-    for s in reversed(tuple(program)):
-        if not isinstance(s, Perm):
-            raise TypeError(
-                f"inverse_program needs a permutation-only program; "
-                f"found {type(s).__name__}")
-        out.append(Perm(s.bmmc.inverse()))
-    return tuple(out)
+    return tuple(inverse_stage(s) for s in reversed(tuple(program)))
 
 
 def num_perm_stages(program: Iterable[Expr]) -> int:

@@ -262,6 +262,313 @@ def _tile_kernel(*refs, rpt: int, row_len: int, in_run: int, out_run: int,
         wait_out(n_tiles - 1 - k)
 
 
+def _tile_bwd_kernel(*refs, rpt: int, row_len: int, in_run: int,
+                     out_run: int, has_tail: bool, batched: bool,
+                     n_tiles: int, num_buffers: int, epis: tuple,
+                     map_fns: tuple):
+    """The gradient megakernel: the exact transpose of one fused pass.
+
+    Tile ``g`` reads the saved cluster input ``x`` at the forward's
+    ``in_rows`` AND the cotangent at the forward's ``out_rows`` (where
+    the forward wrote), then in VMEM (a) un-permutes the cotangent tile
+    through the inverse intra-tile gather (``inv_src0``, the offline
+    inverse of ``src0``; the per-tile XOR folds into the lookup since
+    ``out[j] = pre[src0[j ^ x]] ⇒ ct_pre[k] = ct_out[inv_src0[k] ^ x]``),
+    (b) replays the forward epilogue chain on the x tile to recover every
+    intermediate, (c) applies the TRANSPOSED epilogues in reverse order —
+    masks from the recomputed intermediates, the partner flip being its
+    own transpose (involution) — and writes the result to ``in_rows``.
+    One kernel invocation is therefore the whole cluster backward:
+    ``ctᵢₙ = (B ∘ C̃m ∘ … ∘ C̃1)ᵀ ctₒᵤₜ``, the same DMA round trip count
+    as the forward pass it mirrors.
+    """
+    nb = num_buffers
+    it = iter(refs)
+    in_rows, out_rows, xor_low = next(it), next(it), next(it)
+    epi_scalar = [tuple(next(it) for _ in range(_epi_counts(e)[0]))
+                  for e in epis]
+    x_hbm = next(it)
+    ct_hbm = next(it)
+    inv_src0 = next(it)
+    epi_vmem = [tuple(next(it) for _ in range(_epi_counts(e)[1]))
+                for e in epis]
+    o_hbm = next(it)
+    (xtiles, ctiles, obuf, xin_sems, cin_sems,
+     out_sems) = (next(it), next(it), next(it), next(it), next(it), next(it))
+
+    b = pl.program_id(0) if batched else None
+
+    def hbm_rows(ref, r0, run):
+        return (ref.at[b, pl.ds(r0, run)] if batched
+                else ref.at[pl.ds(r0, run)])
+
+    n_in = rpt // in_run
+    n_out = rpt // out_run
+
+    def x_copy(g, slot, i):
+        return pltpu.make_async_copy(
+            hbm_rows(x_hbm, in_rows[g, i * in_run], in_run),
+            xtiles.at[slot, pl.ds(i * in_run, in_run)],
+            xin_sems.at[slot, i])
+
+    def ct_copy(g, slot, i):
+        return pltpu.make_async_copy(
+            hbm_rows(ct_hbm, out_rows[g, i * out_run], out_run),
+            ctiles.at[slot, pl.ds(i * out_run, out_run)],
+            cin_sems.at[slot, i])
+
+    def out_copy(g, slot, i):
+        # the transpose WRITES where the forward READ: in_rows runs
+        return pltpu.make_async_copy(
+            obuf.at[slot, pl.ds(i * in_run, in_run)],
+            hbm_rows(o_hbm, in_rows[g, i * in_run], in_run),
+            out_sems.at[slot, i])
+
+    def start_in(g):
+        slot = jax.lax.rem(g, nb)
+        for i in range(n_in):
+            x_copy(g, slot, i).start()
+        for i in range(n_out):
+            ct_copy(g, slot, i).start()
+
+    def wait_in(g):
+        slot = jax.lax.rem(g, nb)
+        for i in range(n_in):
+            x_copy(g, slot, i).wait()
+        for i in range(n_out):
+            ct_copy(g, slot, i).wait()
+
+    def start_out(g):
+        slot = jax.lax.rem(g, nb)
+        for i in range(n_in):
+            out_copy(g, slot, i).start()
+
+    def wait_out(g):
+        slot = jax.lax.rem(g, nb)
+        for i in range(n_in):
+            out_copy(g, slot, i).wait()
+
+    def partner_vals(vals, vr, vc):
+        out = vals
+        for axis, v in ((0, vr), (1, vc)):
+            size = rpt if axis == 0 else row_len
+            bb = 0
+            while (1 << bb) < size:
+                if (v >> bb) & 1:
+                    sh = out.shape
+                    out = out.reshape(sh[:axis] + (size >> (bb + 1), 2,
+                                                   1 << bb) + sh[axis + 1:])
+                    out = jnp.flip(out, axis=axis + 1)
+                    out = out.reshape(sh)
+                bb += 1
+        return out
+
+    def forward_chain(vals, g):
+        """Replay the epilogues, keeping EVERY intermediate (the masks of
+        the transposed compares come from the values each stage saw)."""
+        us = [vals]
+        mi = 0
+        for k, e in enumerate(epis):
+            kind = e[0]
+            if kind == "map":
+                vals = map_fns[mi](vals)
+                mi += 1
+                us.append(vals)
+                continue
+            vr, vc = e[1], e[2]
+            pv = partner_vals(vals, vr, vc)
+            hi_row, hi_lane = epi_vmem[k][0], epi_vmem[k][1]
+            hi = (hi_row[...][:, None] ^ hi_lane[...][None, :]
+                  ^ epi_scalar[k][0][g]) == 1
+            if kind == "cmp":
+                mask = hi[..., None] if has_tail else hi
+                vals = jnp.where(mask, jnp.maximum(vals, pv),
+                                 jnp.minimum(vals, pv))
+            else:
+                tw_row, tw_lane, w = (epi_vmem[k][2], epi_vmem[k][3],
+                                      epi_vmem[k][4])
+                tw = (tw_row[...][:, None] ^ tw_lane[...][None, :]
+                      ^ epi_scalar[k][1][g]).reshape(-1)
+                wr = jnp.take(w[...][:, 0], tw, axis=0).reshape(rpt, row_len)
+                wi = jnp.take(w[...][:, 1], tw, axis=0).reshape(rpt, row_len)
+                lo_re = jnp.where(hi, pv[..., 0], vals[..., 0])
+                lo_im = jnp.where(hi, pv[..., 1], vals[..., 1])
+                hi_re = jnp.where(hi, vals[..., 0], pv[..., 0])
+                hi_im = jnp.where(hi, vals[..., 1], pv[..., 1])
+                t_re = wr * hi_re - wi * hi_im
+                t_im = wr * hi_im + wi * hi_re
+                vals = jnp.stack(
+                    [jnp.where(hi, lo_re - t_re, lo_re + t_re),
+                     jnp.where(hi, lo_im - t_im, lo_im + t_im)], axis=-1)
+            us.append(vals)
+        return us
+
+    def transposed_epilogues(ct, us, g):
+        mi = len(map_fns)
+        for k in range(len(epis) - 1, -1, -1):
+            e = epis[k]
+            kind = e[0]
+            u = us[k]
+            if kind == "map":
+                mi -= 1
+                _, vjpf = jax.vjp(map_fns[mi], u)
+                ct = vjpf(ct)[0]
+                continue
+            vr, vc = e[1], e[2]
+            if kind == "cmp":
+                # o = the forward's own output tile (us[k+1]); jax's
+                # balanced-eq tie splitting: d = ct · 1{u==o}/(1+1{w==o}),
+                # identical on both min/max branches GIVEN o, so the hi
+                # mask drops out of the backward entirely
+                o = us[k + 1]
+                w = partner_vals(u, vr, vc)
+                one = jnp.ones((), u.dtype)
+                zero = jnp.zeros((), u.dtype)
+                two = jnp.full((), 2, u.dtype)
+                m1 = (jnp.where(u == o, one, zero)
+                      / jnp.where(w == o, two, one))
+                m2 = (jnp.where(w == o, one, zero)
+                      / jnp.where(u == o, two, one))
+                ct = ct * m1 + partner_vals(ct * m2, vr, vc)
+            else:
+                # linear stage: pair (a₀, a₁) ↦ (a₀ + W a₁, a₀ − W a₁)
+                # with W the planar twiddle rotation; the transpose is
+                # ct₀ ↦ ct₀ + ct₁ and ct₁ ↦ Wᵀ(ct₀ − ct₁)
+                hi_row, hi_lane = epi_vmem[k][0], epi_vmem[k][1]
+                hi = (hi_row[...][:, None] ^ hi_lane[...][None, :]
+                      ^ epi_scalar[k][0][g]) == 1
+                tw_row, tw_lane, w = (epi_vmem[k][2], epi_vmem[k][3],
+                                      epi_vmem[k][4])
+                tw = (tw_row[...][:, None] ^ tw_lane[...][None, :]
+                      ^ epi_scalar[k][1][g]).reshape(-1)
+                wr = jnp.take(w[...][:, 0], tw, axis=0).reshape(rpt, row_len)
+                wi = jnp.take(w[...][:, 1], tw, axis=0).reshape(rpt, row_len)
+                q = partner_vals(ct, vr, vc)
+                s_re = q[..., 0] - ct[..., 0]
+                s_im = q[..., 1] - ct[..., 1]
+                wt_re = wr * s_re + wi * s_im
+                wt_im = wr * s_im - wi * s_re
+                ct = jnp.stack(
+                    [jnp.where(hi, wt_re, ct[..., 0] + q[..., 0]),
+                     jnp.where(hi, wt_im, ct[..., 1] + q[..., 1])], axis=-1)
+        return ct
+
+    def process(g):
+        slot = jax.lax.rem(g, nb)
+        wait_in(g)
+        xv = xtiles[slot]
+        cv = ctiles[slot]
+        # ---- inverse intra-tile gather on the cotangent tile ----
+        if has_tail:
+            flat = cv.reshape(rpt * row_len, -1)
+        else:
+            flat = cv.reshape(rpt * row_len)
+        idx = inv_src0[...].reshape(-1) ^ xor_low[g]
+        cv = jnp.take(flat, idx, axis=0).reshape(ctiles.shape[1:])
+        if epis:
+            us = forward_chain(xv, g)
+            cv = transposed_epilogues(cv, us, g)
+
+        @pl.when(g >= nb)
+        def _():
+            wait_out(g - nb)
+
+        obuf[slot] = cv
+        start_out(g)
+
+    start_in(0)
+
+    def body(g, carry):
+        if nb > 1:
+            @pl.when(g + 1 < n_tiles)
+            def _():
+                start_in(g + 1)
+        else:
+            @pl.when(g > 0)
+            def _():
+                start_in(g)
+        process(g)
+        return carry
+
+    jax.lax.fori_loop(0, n_tiles, body, 0)
+
+    for k in range(min(nb, n_tiles)):
+        wait_out(n_tiles - 1 - k)
+
+
+def tiled_permute_bwd_tables(x: jax.Array, ct: jax.Array, in_rows, out_rows,
+                             xor_low, inv_src0, *, geometry: tuple,
+                             epilogue: tuple = (), epi_scalar: tuple = (),
+                             epi_vmem: tuple = (), map_fns: tuple = (),
+                             interpret: bool = True,
+                             batched: bool = False) -> jax.Array:
+    """The VJP of one fused tiled pass as ONE kernel invocation.
+
+    ``x`` is the saved cluster input (masks of the transposed compares are
+    recomputed from it in VMEM), ``ct`` the output-space cotangent;
+    ``inv_src0`` the offline inverse of the pass's ``src0`` gather table.
+    Returns the input-space cotangent, same shape as ``x``. Mirrors
+    :func:`tiled_permute_tables` exactly: same geometry key, same epilogue
+    signature, same DMA pipeline depth — so the backward executable cache
+    is as warm as the forward's after one (geometry, signature) trace.
+    """
+    n, t, rpt, in_run, out_run, n_tiles, num_buffers = geometry
+    row_len = 1 << t
+    lead = 1 if batched else 0
+    has_tail = x.ndim == 2 + lead
+    d = x.shape[1 + lead] if has_tail else 1
+    row_view = (1 << (n - t), row_len) + ((d,) if has_tail else ())
+    if batched:
+        row_view = (x.shape[0],) + row_view
+    xv = x.reshape(row_view)
+    cv = ct.reshape(row_view)
+    tile_shape = (rpt, row_len, d) if has_tail else (rpt, row_len)
+
+    kern = functools.partial(
+        _tile_bwd_kernel, rpt=rpt, row_len=row_len,
+        in_run=in_run, out_run=out_run, has_tail=has_tail, batched=batched,
+        n_tiles=n_tiles, num_buffers=num_buffers, epis=tuple(epilogue),
+        map_fns=tuple(map_fns),
+    )
+    grid = (x.shape[0],) if batched else (1,)
+    n_scalar = 3 + sum(_epi_counts(e)[0] for e in epilogue)
+    n_vtab = sum(_epi_counts(e)[1] for e in epilogue)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_scalar,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=_HBM),   # x rows
+            pl.BlockSpec(memory_space=_HBM),   # ct rows
+            pl.BlockSpec(memory_space=_VMEM),  # inv_src0
+        ] + [pl.BlockSpec(memory_space=_VMEM)] * n_vtab,
+        out_specs=pl.BlockSpec(memory_space=_HBM),
+        scratch_shapes=[
+            pltpu.VMEM((num_buffers,) + tile_shape, x.dtype),   # x slots
+            pltpu.VMEM((num_buffers,) + tile_shape, x.dtype),   # ct slots
+            pltpu.VMEM((num_buffers,) + tile_shape, x.dtype),   # out slots
+            pltpu.SemaphoreType.DMA((num_buffers, rpt // in_run)),
+            pltpu.SemaphoreType.DMA((num_buffers, rpt // out_run)),
+            pltpu.SemaphoreType.DMA((num_buffers, rpt // in_run)),
+        ],
+    )
+    args = [jnp.asarray(in_rows), jnp.asarray(out_rows), jnp.asarray(xor_low)]
+    for grp in epi_scalar:
+        args.extend(jnp.asarray(a) for a in grp)
+    args.extend([xv, cv, jnp.asarray(inv_src0)])
+    for grp in epi_vmem:
+        args.extend(jnp.asarray(a) for a in grp)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(row_view, x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * len(grid),
+        ),
+    )(*args)
+    return out.reshape(x.shape)
+
+
 def default_num_buffers(n_tiles: int) -> int:
     """2 (double buffering) whenever there is more than one tile."""
     return 1 if n_tiles == 1 else 2

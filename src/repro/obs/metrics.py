@@ -18,9 +18,23 @@ Counter vocabulary used by the executor stack (DESIGN.md §12):
   / block / lane / tiled / general) of each dispatched matrix.
 * ``dma.descriptors`` / ``model.round_trips`` — modeled DMA descriptor
   and HBM-round-trip totals of everything dispatched.
+* ``dispatch.vjp{kind=...}`` — one count per custom-vjp backward rule
+  executed (``perm`` / ``collapsed`` / ``replay`` / ``fused`` /
+  ``stage``), i.e. which backward compilation path (DESIGN.md §13) a
+  gradient took.
+* ``model.vjp_round_trips`` — the slice of ``model.round_trips``
+  attributable to backward-rule bodies: each vjp rule records the
+  ``model.round_trips`` delta its own dispatches produced, so a cold
+  backward call's ``model.vjp_round_trips`` delta equals the modeled
+  cost of the compiled inverse/collapsed program
+  (``CompiledExpr.vjp_round_trips`` — the backward honesty gate).
 * ``optimize.fold_free_folds`` / ``optimize.clusters`` /
   ``optimize.cluster_stages_absorbed`` — planner decisions.
 * ``dispatch.fused_fallback`` — clusters replayed stage-at-a-time.
+
+Span vocabulary for gradients mirrors the forward's: ``program.vjp`` /
+``fused.vjp`` / ``stage.vjp`` wrap the corresponding backward rule
+bodies, and ``kernel.fused_bwd`` wraps the (gated) gradient megakernel.
 """
 from __future__ import annotations
 

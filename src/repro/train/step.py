@@ -50,6 +50,7 @@ def _instrument_step(train_step: Callable) -> Callable:
         if not (obs.enabled() and _trace_state_clean()):
             return train_step(params, opt_state, batch)
         rt0 = obs.counter_total("model.round_trips")
+        vjp0 = obs.counter_total("model.vjp_round_trips")
         perm0 = sum(s["sum"] for (nm, _), s in obs.histograms().items()
                     if nm == "program.call_us")
         with obs.span("train.step") as sargs:
@@ -63,6 +64,9 @@ def _instrument_step(train_step: Callable) -> Callable:
         rt = obs.counter_total("model.round_trips") - rt0
         if rt:  # permute stages traced/dispatched inside this step
             obs.inc("train.permute_round_trips", rt)
+        vjp = obs.counter_total("model.vjp_round_trips") - vjp0
+        if vjp:  # backward-rule passes traced/dispatched inside this step
+            obs.inc("train.permute_vjp_round_trips", vjp)
         perm_us = sum(s["sum"] for (nm, _), s in obs.histograms().items()
                       if nm == "program.call_us") - perm0
         if perm_us and dur_us > 0:
