@@ -35,6 +35,14 @@ noise). Where present, ``bwd_mirrors_fwd`` (permutation-only programs:
 the backward kernel-class histogram mirrors the forward's) must stay
 True.
 
+Guard gates (PR 8, DESIGN.md §14): ``*/fault_injection`` rows must
+report ``faults_caught == faults_injected`` — every corruption class
+the ring-3 harness injects is caught (typed error or recovered
+fallback), zero silent-wrong-output cases — and ``*/overhead`` rows'
+``guard_overhead_ratio`` (guarded / unguarded warm dispatch, a
+same-machine paired measurement, so machine noise largely cancels)
+must stay <= ``GUARD_OVERHEAD_TOL``.
+
 Other wall-clock rows are reported but never gated (CI machines are
 noisy); rows whose ``us`` is null carry no wall-clock measurement at
 all (model-only/telemetry rows) and are explicitly exempt from any
@@ -53,8 +61,13 @@ import sys
 # it, machine noise too; an order-of-magnitude lie does not
 DRIFT_TOL = 5.0
 
+# guarded warm dispatch may cost at most this multiple of unguarded
+# (the ISSUE 8 acceptance bar: <= 5% steady-state guard overhead; the
+# ratio is a paired same-machine measurement, so noise mostly cancels)
+GUARD_OVERHEAD_TOL = 1.05
+
 _GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry",
-                   "/bwd_telemetry")
+                   "/bwd_telemetry", "/overhead", "/fault_injection")
 
 
 def _has_timing(row: dict) -> bool:
@@ -145,6 +158,38 @@ def check(baseline: dict, current: dict) -> list:
                         "(the compiled backward gained passes)")
             else:
                 skipped.append(name)
+            continue
+        if name.endswith("/fault_injection"):
+            d = _derived(row)
+            try:
+                caught = int(d.get("faults_caught"))
+                injected = int(d.get("faults_injected"))
+            except (TypeError, ValueError):
+                failures.append(
+                    f"{name}: fault-injection row missing parseable "
+                    f"faults_caught/faults_injected")
+                continue
+            if caught != injected or injected == 0:
+                missed = [p for p in row.get("derived", "").split(";")
+                          if p.endswith("=MISSED")]
+                failures.append(
+                    f"{name}: {caught}/{injected} injected faults caught "
+                    f"({'; '.join(missed) or 'no per-kind detail'}) — an "
+                    "uncaught fault is a silent-wrong-output path")
+            continue
+        if name.endswith("/overhead"):
+            d = _derived(row)
+            try:
+                ratio = float(d.get("guard_overhead_ratio"))
+            except (TypeError, ValueError):
+                failures.append(
+                    f"{name}: overhead row missing a parseable "
+                    f"guard_overhead_ratio")
+                continue
+            if ratio > GUARD_OVERHEAD_TOL:
+                failures.append(
+                    f"{name}: guarded warm dispatch costs {ratio:.3f}x "
+                    f"unguarded (gate: <= {GUARD_OVERHEAD_TOL}x)")
             continue
         if name.endswith("/telemetry"):
             # deterministic counter-vs-model comparison: never True->False

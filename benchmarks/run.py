@@ -26,11 +26,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
                          "fig9,fig10,transpose,sort,khc,roofline,"
-                         "combinators,autodiff,stagefusion,classdispatch")
+                         "combinators,autodiff,stagefusion,classdispatch,"
+                         "guard")
     ap.add_argument("--smoke", action="store_true",
                     help="fast sanity subset (combinators + autodiff + "
-                         "stagefusion + classdispatch; pairs with `pytest "
-                         "-m tier1` as the quick tier-1 smoke entry point)")
+                         "stagefusion + classdispatch + guard; pairs with "
+                         "`pytest -m tier1` as the quick tier-1 smoke "
+                         "entry point)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows + metadata as JSON")
     ap.add_argument("--trace", default=None, metavar="TRACE.json",
@@ -45,7 +47,8 @@ def main() -> None:
         ap.error("--smoke and --only are mutually exclusive")
     want = set(args.only.split(",")) if args.only else None
     if args.smoke:
-        want = {"combinators", "autodiff", "stagefusion", "classdispatch"}
+        want = {"combinators", "autodiff", "stagefusion", "classdispatch",
+                "guard"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -79,6 +82,9 @@ def main() -> None:
     if want is None or "classdispatch" in want:
         from . import class_dispatch
         suites.append(class_dispatch.rows)
+    if want is None or "guard" in want:
+        from . import guard_overhead
+        suites.append(guard_overhead.rows)
     collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():

@@ -109,8 +109,10 @@ def get_engine(engine: Union[str, EngineFn, None]) -> EngineFn:
     try:
         return _ENGINES[engine]
     except KeyError:
-        raise KeyError(f"unknown engine {engine!r}; registered engines: "
-                       f"{sorted(_ENGINES)}") from None
+        from ..guard.errors import UnknownEngine
+        raise UnknownEngine(
+            f"unknown engine {engine!r}; registered engines: "
+            f"{sorted(_ENGINES)}") from None
 
 
 def engines() -> tuple:
@@ -980,8 +982,9 @@ def _apply_bfly(x: jax.Array, twiddles: tuple, axis: int = 0) -> jax.Array:
         t = w * hi
         return jnp.concatenate([lo + t, lo - t], axis=axis)
     if x.ndim != axis + 2 or x.shape[-1] != 2:
-        raise ValueError("real-typed Bfly input must have a trailing "
-                         "(re, im) dim of 2")
+        from ..guard.errors import BadInput
+        raise BadInput("real-typed Bfly input must have a trailing "
+                       f"(re, im) dim of 2; got shape {x.shape}")
     wshape = (1,) * axis + (h,)
     wr = jnp.asarray(np.asarray([w.real for w in twiddles],
                                 dtype=x.dtype)).reshape(wshape)
@@ -1010,8 +1013,9 @@ def _exec_stage(s: Expr, x: jax.Array, engine, batched: bool,
         return _apply_bfly(x, s.twiddles, axis)
     if isinstance(s, Map):
         return s.fn(x)
-    raise TypeError(f"non-primitive stage {type(s).__name__}; "
-                    "lower() the expression first")
+    from ..guard.errors import BadStage
+    raise BadStage(f"non-primitive stage {type(s).__name__}; "
+                   "lower() the expression first")
 
 
 def run_program(program: Sequence[Expr], x: jax.Array,
@@ -1263,6 +1267,9 @@ def cache_stats() -> Dict[str, CacheStats]:
     stats["compiled_exprs"] = CacheStats(
         hits=_compiled_stats["hits"], misses=_compiled_stats["misses"],
         maxsize=None, currsize=len(_COMPILED))
+    from ..guard.validate import guard_cache_stats
+    for name, info in guard_cache_stats().items():
+        stats[name] = CacheStats(*info)
     return stats
 
 
@@ -1344,14 +1351,15 @@ class CompiledExpr:
 
     def _resolve(self, x: jax.Array, batched: bool) -> tuple:
         """(program, tile parameter) the executor will run on ``x``."""
+        from ..guard.errors import BadInput
         axis = 1 if batched else 0
         if x.ndim <= axis:
             what = ("a leading batch dim plus the permuted axis" if batched
                     else "a permutable leading axis")
-            raise ValueError(f"input needs {what}, got shape {x.shape}")
+            raise BadInput(f"input needs {what}, got shape {x.shape}")
         n = int(x.shape[axis]).bit_length() - 1
         if (1 << n) != x.shape[axis]:
-            raise ValueError(
+            raise BadInput(
                 f"array length {x.shape[axis]} is not a power of 2")
         from ..kernels.ops import choose_tile
         d = x.shape[axis + 1] if x.ndim == axis + 2 else 1
@@ -1361,6 +1369,15 @@ class CompiledExpr:
             # megakernel clustering + free-stage folding; the ref oracle
             # and injected engines stay stage-at-a-time
             prog = self.clustered_program(n, t)
+        from .. import guard as _g
+        if _g.enabled():
+            # ring 1: prove the resolved program's invariants (BMMC
+            # invertibility, class-predicate consistency, descriptor
+            # bounds) before any executable bakes its tables in. Cached
+            # per (program, t); warm calls pay an identity-memo hit
+            # (the deep program-tuple hash is too slow per call).
+            from ..guard.validate import validate_program_fast
+            validate_program_fast(tuple(prog), t)
         return prog, t
 
     def _resolve_program(self, x: jax.Array, batched: bool) -> Program:
@@ -1368,6 +1385,18 @@ class CompiledExpr:
 
     def __call__(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
         prog, t = self._resolve(x, batched)
+        from .. import guard as _g
+        if _g.enabled():
+            from ..guard import runtime as _grt
+            if _grt._trace_state_clean():
+                # ring 2: guarded dispatch — program + in-program
+                # probes in one executable (wrapping the inner jitted
+                # _program_executable, so the cache/telemetry contracts
+                # hold), flags resolved at this edge, with the pallas →
+                # ref fallback machine on a trap. Skipped under an
+                # outer trace (the flag readback needs a concrete
+                # value); ring 1 in _resolve still ran.
+                return _grt.guarded_call(prog, t, x, self.engine, batched)
         # Programs carrying user Map callables stay on the eager
         # per-stage path (inside _dispatch_program): Map's contract says
         # "a jax function", but eager execution historically tolerated
@@ -1441,6 +1470,10 @@ def clear_caches() -> None:
     _compiled_stats["hits"] = _compiled_stats["misses"] = 0
     ops._plans_cached.cache_clear()
     ops._class_plan_cached.cache_clear()
+    from ..guard.validate import clear_guard_caches
+    clear_guard_caches()
+    from .. import guard
+    guard.reset_stats()
     obs.reset()
 
 

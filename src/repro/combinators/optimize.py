@@ -99,11 +99,14 @@ def lower(expr: Expr, n: int) -> Program:
         return (Perm(a),) + body + (Perm(a.inverse()),)
     if isinstance(expr, Perm):
         if expr.bmmc.n != n:
-            raise ValueError(f"Perm is on {expr.bmmc.n} bits, array has {n}")
+            from ..guard.errors import BadInput
+            raise BadInput(f"Perm is on {expr.bmmc.n} bits, array has {n}")
         return (expr,)
     if isinstance(expr, Bfly):
         if expr.size_bits() != n:
-            raise ValueError(f"Bfly is on {expr.size_bits()} bits, array has {n}")
+            from ..guard.errors import BadInput
+            raise BadInput(
+                f"Bfly is on {expr.size_bits()} bits, array has {n}")
         return (expr,)
     if isinstance(expr, PRIMITIVES):
         return (expr,)
@@ -372,7 +375,8 @@ def inverse_stage(s: Expr) -> Expr:
         return _run_fused(
             tuple(Perm(st.bmmc.inverse()) for st in reversed(s.stages)),
             s.bmmc.n)
-    raise TypeError(
+    from ..guard.errors import BadStage
+    raise BadStage(
         f"inverse_program needs a permutation-only program; "
         f"found {type(s).__name__}"
         + (" with compute stages" if isinstance(s, FusedStage) else ""))

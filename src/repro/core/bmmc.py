@@ -90,6 +90,17 @@ class Bmmc:
         """y = A x ^ c for a single integer index."""
         return f2.matvec(self.rows, x) ^ self.c
 
+    def verify(self) -> "Bmmc":
+        """Re-prove well-formedness (bit ranges + F2 rank) through the
+        guard subsystem, raising the typed
+        :class:`repro.guard.NotInvertible` on failure. ``__post_init__``
+        ran the same rank check at construction, but an instance reaching
+        the planner through a cache (or ``object.__setattr__``) may never
+        have been constructed — plan-time validation calls this
+        (DESIGN.md §14, ring 1)."""
+        from ..guard.validate import verify_bmmc  # lazy: no core->guard cycle
+        return verify_bmmc(self)
+
     def inverse(self) -> "Bmmc":
         """The inverse transformation: x = A^-1 (y ^ c) = A^-1 y ^ A^-1 c."""
         ainv = f2.inverse(self.rows)

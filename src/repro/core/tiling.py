@@ -126,6 +126,15 @@ class TilePlan:
         return (self.in_run * self.row_len * itemsize,
                 self.out_run * self.row_len * itemsize)
 
+    def audit(self) -> "TilePlan":
+        """Descriptor-bounds + semantic audit (guard ring 1): every
+        table entry within the geometry, ``src0`` a bijection, and the
+        kernel contract routing exactly what the BMMC demands. Raises
+        :class:`repro.guard.DescriptorOOB`."""
+        from ..guard.validate import audit_tile_plan  # lazy: no cycle
+        audit_tile_plan(self)
+        return self
+
 
 def plan_tiled(bmmc: Bmmc, t: int) -> Optional[TilePlan]:
     """Build a TilePlan, or None if ``bmmc`` is not tiled for this ``t``."""
@@ -653,6 +662,14 @@ class BlockPlan:
         ``b == _COPY_BLOCK_BITS``."""
         return 2 * self.n_rows
 
+    def audit(self) -> "BlockPlan":
+        """Guard ring-1 audit: ``src_rows`` a bounded permutation whose
+        block map matches the BMMC. Raises
+        :class:`repro.guard.DescriptorOOB`."""
+        from ..guard.validate import audit_block_plan  # lazy: no cycle
+        audit_block_plan(self)
+        return self
+
 
 @dataclasses.dataclass(frozen=True)
 class LanePlan:
@@ -674,6 +691,14 @@ class LanePlan:
 
     def dma_descriptors(self) -> int:
         return 2 * (self.n_rows // self.rows_per_block)
+
+    def audit(self) -> "LanePlan":
+        """Guard ring-1 audit: ``src_lane`` a bounded permutation whose
+        in-row gather matches the BMMC. Raises
+        :class:`repro.guard.DescriptorOOB`."""
+        from ..guard.validate import audit_lane_plan  # lazy: no cycle
+        audit_lane_plan(self)
+        return self
 
 
 def _block_granularity(bmmc: Bmmc) -> int:

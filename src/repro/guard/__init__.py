@@ -1,0 +1,156 @@
+"""Validated execution: three guard rings around the permutation engine.
+
+DESIGN.md §14. The correctness story of the whole stack rests on two
+families of invariants the planner historically *assumed*: every BMMC
+is invertible over F2, and every offline table (tile plans, DMA maps,
+gather tables, parity tables) stays inside the geometry it addresses.
+This package makes those invariants *enforced*:
+
+* **Ring 1 — plan time, always on** (:mod:`.validate`): before a
+  compiled program (or a standalone class-dispatch plan) is trusted,
+  its invariants are proved — F2 rank of every matrix, class-predicate
+  consistency of every fast-path dispatch, descriptor-bounds + semantic
+  audit of every tile/DMA table, recorded XOR fingerprints for later
+  poisoning detection. Failures raise the typed taxonomy in
+  :mod:`.errors` (``NotInvertible`` / ``ClassMismatch`` /
+  ``DescriptorOOB`` / ``BadInput`` / ``CachePoisoned`` …), each keeping
+  its backward-compatible builtin base. Validation is cached, so the
+  always-on ring costs one pass per (program, tile) — never per call.
+
+* **Ring 2 — run time, opt-in, no host sync in the program**
+  (:mod:`.runtime`): ``enable()`` (or ``REPRO_GUARD=1`` in the
+  environment) switches :class:`repro.combinators.execute.CompiledExpr`
+  and :func:`repro.kernels.ops.bmmc_permute` to guarded dispatch:
+  checkify-style error *flags* — an OOB descriptor trap, a NaN/Inf
+  sentinel on compute epilogues, and an XOR-parity round-trip probe
+  (``apply ∘ inverse`` collapsed offline to a sampled-slice gather
+  compare) — are computed *inside* the jitted program and accumulate
+  into one int32 error value resolved only at the API edge. On a
+  trapped pallas fault the call degrades gracefully to the ref engine
+  (``guard.trap{kind}`` / ``guard.fallback{engine}`` counters) and
+  fails loudly — :class:`~.errors.GuardTrap` — only if the fallback
+  traps too.
+
+* **Ring 3 — test time** (:mod:`.inject`): a fault-injection harness
+  that deliberately corrupts each layer (bit-flip a BMMC row, swap
+  descriptor entries, poison a cached plan, truncate a parity table,
+  feed malformed inputs) so the suite can assert every corruption class
+  is *caught* — typed error or recovered fallback — never silently
+  wrong.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+from .errors import (BadInput, BadStage, CachePoisoned, ClassMismatch,
+                     DescriptorOOB, GuardError, GuardTrap, NotInvertible,
+                     UnknownEngine)
+
+_state = threading.local()
+_STATS_LOCK = threading.Lock()
+_STATS: dict = {"traps": {}, "fallbacks": {}, "recovered": 0, "raised": {}}
+
+_ENV_FLAG = os.environ.get("REPRO_GUARD", "").strip().lower() in (
+    "1", "true", "on", "yes")
+_enabled = _ENV_FLAG
+
+
+def enable() -> None:
+    """Turn on ring-2 guarded dispatch for subsequent calls."""
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    """Is ring-2 guarded dispatch active (``enable()`` or
+    ``REPRO_GUARD=1``)?"""
+    return _enabled
+
+
+class guarded:
+    """Context manager: guards on inside the block, restored after."""
+
+    def __enter__(self):
+        self._prev = _enabled
+        enable()
+        return self
+
+    def __exit__(self, *exc):
+        global _enabled
+        _enabled = self._prev
+        return False
+
+
+def _record_trap(kind: str, engine: str) -> None:
+    from ..obs import metrics as _om
+    with _STATS_LOCK:
+        k = (kind, engine)
+        _STATS["traps"][k] = _STATS["traps"].get(k, 0) + 1
+    _om.inc("guard.trap", kind=kind, engine=engine)
+
+
+def _record_fallback(engine: str) -> None:
+    from ..obs import metrics as _om
+    with _STATS_LOCK:
+        _STATS["fallbacks"][engine] = _STATS["fallbacks"].get(engine, 0) + 1
+    _om.inc("guard.fallback", engine=engine)
+
+
+def _record_recovered() -> None:
+    from ..obs import metrics as _om
+    with _STATS_LOCK:
+        _STATS["recovered"] += 1
+    _om.inc("guard.recovered")
+
+
+def _record_raised(err: BaseException) -> None:
+    from ..obs import metrics as _om
+    name = type(err).__name__
+    with _STATS_LOCK:
+        _STATS["raised"][name] = _STATS["raised"].get(name, 0) + 1
+    _om.inc("guard.raised", error=name)
+
+
+def stats() -> dict:
+    """Guard-subsystem counters (always recorded while guards are on,
+    independent of :mod:`repro.obs` being enabled): per-(kind, engine)
+    trap counts, per-engine fallback counts, recovered-request count,
+    and per-type raised-error counts."""
+    with _STATS_LOCK:
+        return {"traps": dict(_STATS["traps"]),
+                "fallbacks": dict(_STATS["fallbacks"]),
+                "recovered": _STATS["recovered"],
+                "raised": dict(_STATS["raised"])}
+
+
+def reset_stats() -> None:
+    with _STATS_LOCK:
+        _STATS["traps"].clear()
+        _STATS["fallbacks"].clear()
+        _STATS["raised"].clear()
+        _STATS["recovered"] = 0
+
+
+from .validate import (  # noqa: E402  (needs the state above)
+    audit_block_plan, audit_lane_plan, audit_tile_plan, clear_guard_caches,
+    guard_cache_stats, plan_fingerprint, validate_dispatch, validate_input,
+    validate_program, verify_bmmc)
+from .runtime import (  # noqa: E402
+    TRAP_KINDS, guarded_bmmc_permute, guarded_call, resolve_flags)
+
+__all__ = [
+    "GuardError", "NotInvertible", "ClassMismatch", "DescriptorOOB",
+    "BadInput", "BadStage", "UnknownEngine", "CachePoisoned", "GuardTrap",
+    "enable", "disable", "enabled", "guarded", "stats", "reset_stats",
+    "verify_bmmc", "validate_dispatch", "validate_program",
+    "validate_input", "audit_tile_plan", "audit_block_plan",
+    "audit_lane_plan", "plan_fingerprint", "guard_cache_stats",
+    "clear_guard_caches", "guarded_call", "resolve_flags",
+    "guarded_bmmc_permute", "TRAP_KINDS",
+]

@@ -1,0 +1,280 @@
+"""Ring 3 — fault injection (test time; DESIGN.md §14).
+
+Each injector deliberately corrupts ONE layer of the stack the way a
+real defect would — a flipped bit in a matrix row, a swapped pair of
+descriptor entries, a cache whose tables were mutated in place, a
+truncated parity table, a malformed input — and restores the original
+state on exit. The harness (:func:`run_fault_matrix`) drives every
+corruption class against a guarded engine and reports, per fault,
+whether the stack *caught* it: a typed :class:`~.errors.GuardError`, or
+a recovered engine fallback whose result still bitwise-matches the
+oracle. A fault that produces a silently wrong output is the one
+outcome the suite must never see.
+
+Corruption mechanics worth noting:
+
+* ``corrupt_bmmc`` bypasses ``Bmmc.__post_init__`` (via ``__new__`` +
+  ``object.__setattr__``) exactly because the constructor would reject
+  a singular matrix — the injected object models a matrix corrupted
+  *after* construction (bit flip in a cached row).
+* ``swap_descriptors`` / ``poison_plan`` mutate the *cached* numpy
+  tables in place — the same arrays every future trace bakes in — so
+  they model cache poisoning, not a planner bug. Both restore the
+  original bytes on exit.
+* ``truncate_parity_table`` shrinks a fused epilogue's per-lane parity
+  table through ``object.__setattr__`` on the frozen dataclass.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from ..core.bmmc import Bmmc
+from .errors import GuardError
+
+FAULT_KINDS = ("bitflip_bmmc", "swap_descriptor", "poison_cache",
+               "truncate_parity_table", "bad_input")
+
+
+def corrupt_bmmc(bmmc: Bmmc) -> Bmmc:
+    """A bit-flipped copy of ``bmmc`` that is singular over F2 (row 0
+    XORed into row 1 makes them sum to zero), built WITHOUT running
+    ``__post_init__`` — modeling a matrix corrupted after construction."""
+    rows = list(bmmc.rows)
+    rows[1] = rows[0]            # two equal rows: rank < n
+    bad = Bmmc.__new__(Bmmc)
+    object.__setattr__(bad, "rows", tuple(rows))
+    object.__setattr__(bad, "c", bmmc.c)
+    return bad
+
+
+def _payload_tables(kernel: str, payload) -> list:
+    """The in-place-mutable numpy tables of one class-dispatch payload,
+    with their exclusive index bounds."""
+    if kernel == "block":
+        return [(payload.src_rows, payload.n_rows)]
+    if kernel == "lane":
+        return [(payload.src_lane, 1 << payload.t)]
+    if kernel == "none":
+        return []
+    out = []
+    for plan in payload:
+        out.append((plan.src0, plan.rows_per_tile * plan.row_len))
+    return out
+
+
+def _cached_tables(bmmc: Bmmc, t: int) -> list:
+    from ..kernels import ops
+
+    kernel, payload = ops.class_plan(bmmc, t)
+    tables = _payload_tables(kernel, payload)
+    if not tables:
+        raise ValueError(f"kernel {kernel!r} has no table to corrupt")
+    return tables
+
+
+@contextlib.contextmanager
+def swap_descriptors(bmmc: Bmmc, t: int):
+    """Swap the first and last entry of the cached plan's main gather
+    table IN PLACE (stays in-bounds: only the semantic audit or the
+    runtime parity probe can see it). Restores on exit."""
+    tab, _ = _cached_tables(bmmc, t)[0]
+    flat = tab.reshape(-1)
+    a, b = int(flat[0]), int(flat[-1])
+    if a == b:
+        raise ValueError("degenerate table: swap would be a no-op")
+    flat[0], flat[-1] = b, a
+    try:
+        yield tab
+    finally:
+        flat[0], flat[-1] = a, b
+
+
+@contextlib.contextmanager
+def poison_plan(bmmc: Bmmc, t: int):
+    """Overwrite one cached descriptor with an out-of-range index —
+    the corruption the in-program OOB trap exists for. Restores on
+    exit."""
+    tab, bound = _cached_tables(bmmc, t)[0]
+    flat = tab.reshape(-1)
+    orig = int(flat[0])
+    flat[0] = bound + 7
+    try:
+        yield tab
+    finally:
+        flat[0] = orig
+
+
+@contextlib.contextmanager
+def poison_ref_table(bmmc: Bmmc):
+    """Overwrite one entry of the ref engine's cached gather table with
+    an out-of-range index (the ref twin of :func:`poison_plan`).
+    Restores on exit."""
+    from ..kernels import ref as _ref
+
+    tab = _ref._src_table(bmmc.rows, bmmc.c)
+    orig = int(tab[0])
+    tab[0] = bmmc.size + 7
+    try:
+        yield tab
+    finally:
+        tab[0] = orig
+
+
+@contextlib.contextmanager
+def truncate_parity_table(fs, t: int):
+    """Truncate a fused epilogue's per-lane parity table to half length
+    through the frozen dataclass — ring 1's shape audit must refuse the
+    plan. ``fs`` is a compute-bearing FusedStage."""
+    from ..combinators import execute as _ex
+
+    got = _ex._fused_plan_cached(fs, t)
+    if got is None:
+        raise ValueError("cluster has no fused plan at this t")
+    entries = got[1]
+    cts = [e[2] for e in entries if e[0] in ("cmp", "bfly")]
+    if not cts:
+        raise ValueError("cluster has no parity-table-bearing epilogue")
+    ct = cts[0]
+    orig = ct.hi_lane
+    object.__setattr__(ct, "hi_lane", np.ascontiguousarray(
+        orig[:max(1, orig.size // 2)]))
+    try:
+        yield ct
+    finally:
+        object.__setattr__(ct, "hi_lane", orig)
+
+
+# ---------------------------------------------------------------------------
+# the injection harness
+# ---------------------------------------------------------------------------
+
+def _fresh_guard_state():
+    """Clear every cache a fault could hide behind: guard validation +
+    guarded executables (so ring 1 re-proves and ring 2 re-bakes)."""
+    from . import validate as _v
+
+    _v.clear_guard_caches()
+
+
+def _clear_runtime_only():
+    """Keep ring-1 signatures warm but force the guarded executables to
+    re-trace — modeling corruption that lands AFTER validation."""
+    from . import runtime as _rt
+
+    _rt._guarded_executable.cache_clear()
+    _rt._guarded_permute_executable.cache_clear()
+    _rt._EXEC_MEMO.clear()
+
+
+def run_fault_matrix(engine: str = "pallas", n: int = 6) -> dict:
+    """Inject every corruption class against a guarded ``engine`` and
+    report ``{injected, caught, cases}``. Each case is caught when the
+    stack raises a typed :class:`GuardError` subclass (plan-time
+    detection) or recovers via engine fallback with a bitwise-correct
+    result (run-time detection). A silently wrong output marks the case
+    uncaught — the outcome this harness exists to rule out.
+    """
+    import jax.numpy as jnp
+
+    from .. import guard as _g
+    from ..combinators import vocab as V
+    from ..combinators.execute import compile_expr
+    from ..kernels import ops, ref as _ref
+
+    x = jnp.arange(1 << n, dtype=jnp.float32)
+    bmmc = Bmmc.bit_reverse(n)
+    t = ops.choose_tile(n, 4)
+    oracle = np.asarray(_ref.bmmc_ref(x, bmmc))
+    cases = []
+
+    def record(kind, caught, how):
+        cases.append({"kind": kind, "caught": bool(caught), "how": how})
+
+    with _g.guarded():
+        # 1. bit-flipped BMMC row -> singular matrix -> NotInvertible
+        bad = corrupt_bmmc(bmmc)
+        try:
+            from . import validate as _v
+            _v.verify_bmmc(bad)
+            record("bitflip_bmmc", False, "validated a singular matrix")
+        except GuardError as e:
+            record("bitflip_bmmc", True, type(e).__name__)
+
+        # 2. swapped descriptor entries, in-bounds -> ring-1 semantic
+        # audit (fresh validation) must refuse the plan
+        ce = compile_expr(V.bit_reverse(n), engine=engine, optimize=False)
+        ce(x)  # warm plans + caches
+        _fresh_guard_state()
+        try:
+            with swap_descriptors(bmmc, t):
+                y = ce(x)
+                wrong = not np.array_equal(np.asarray(y), oracle)
+                record("swap_descriptor", not wrong,
+                       "fallback-recovered" if not wrong
+                       else "SILENT WRONG OUTPUT")
+        except GuardError as e:
+            record("swap_descriptor", True, type(e).__name__)
+        _fresh_guard_state()
+
+        # 3. poisoned cache AFTER validation -> runtime OOB/parity trap
+        # -> pallas degrades to ref and recovers (or typed error)
+        ce(x)  # re-warm and re-validate the clean plans
+        base = _g.stats()
+        try:
+            # poison the table the CHOSEN engine actually bakes in: the
+            # ref gather table and the pallas plan caches are disjoint
+            ctx = (poison_ref_table(bmmc) if engine == "ref"
+                   else poison_plan(bmmc, t))
+            with ctx:
+                _clear_runtime_only()  # re-bake the poisoned tables
+                y = ce(x)
+            ok = np.array_equal(np.asarray(y), oracle)
+            now = _g.stats()
+            trapped = sum(now["traps"].values()) > sum(
+                base["traps"].values())
+            record("poison_cache", ok and trapped,
+                   "fallback-recovered" if ok and trapped
+                   else ("no trap recorded" if ok
+                         else "SILENT WRONG OUTPUT"))
+        except GuardError as e:
+            record("poison_cache", True, type(e).__name__)
+        finally:
+            _fresh_guard_state()
+
+        # 4. truncated parity table on a fused compute cluster -> ring-1
+        # shape audit -> DescriptorOOB
+        from ..combinators.sort import sort_expr
+        sce = compile_expr(sort_expr(n), engine="pallas", optimize=True)
+        xs = jnp.asarray(np.random.default_rng(0).standard_normal(1 << n),
+                         dtype=jnp.float32)
+        sce(xs)  # warm: builds the fused plans + compute tables
+        prog, st = sce._resolve(xs, False)
+        fused = [s for s in prog
+                 if getattr(s, "computes", ())]
+        try:
+            if not fused:
+                record("truncate_parity_table", False, "no cluster found")
+            else:
+                _fresh_guard_state()
+                with truncate_parity_table(fused[0], st):
+                    sce(xs)
+                record("truncate_parity_table", False,
+                       "validated a truncated table")
+        except GuardError as e:
+            record("truncate_parity_table", True, type(e).__name__)
+        except ValueError as e:
+            record("truncate_parity_table", False, f"inject failed: {e}")
+        finally:
+            _fresh_guard_state()
+
+        # 5. malformed inputs: wrong length / missing axis -> BadInput
+        try:
+            ce(jnp.arange(24.0))
+            record("bad_input", False, "accepted a non-power-of-2 input")
+        except GuardError as e:
+            record("bad_input", True, type(e).__name__)
+
+    caught = sum(1 for c in cases if c["caught"])
+    return {"injected": len(cases), "caught": caught, "cases": cases}

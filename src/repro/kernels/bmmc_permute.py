@@ -664,10 +664,42 @@ def tiled_permute_tables(x: jax.Array, in_rows, out_rows, xor_low, src0, *,
     return out.reshape(x.shape)
 
 
+def _trap_tables(pairs) -> None:
+    """Host-side descriptor trap at the kernel-launch boundary: when
+    guards are on and the plan tables are still concrete (numpy, not
+    traced runtime arguments), refuse to launch a kernel whose gather /
+    DMA tables address outside their geometry. This is the last line
+    before a poisoned table becomes a baked trace constant; the traced
+    twin of the same check lives in :mod:`repro.guard.runtime`
+    (DESIGN.md §14, ring 2)."""
+    from .. import guard as _g
+    if not _g.enabled():
+        return
+    from ..guard import runtime as _grt
+    if not _grt._trace_state_clean():
+        # under a trace (incl. ring 2's own guarded executable) the
+        # in-program OOB flag owns this check — raising here would
+        # preempt the trap → fallback machinery
+        return
+    from ..guard.errors import DescriptorOOB
+    for name, tab, hi in pairs:
+        if not isinstance(tab, np.ndarray):
+            continue  # traced table: the in-program OOB trap covers it
+        if tab.size and (int(tab.min()) < 0 or int(tab.max()) >= hi):
+            raise DescriptorOOB(
+                f"kernel launch refused: table {name!r} addresses "
+                f"[{int(tab.min())}, {int(tab.max())}] outside [0, {hi})")
+
+
 def tiled_permute(x: jax.Array, plan: TilePlan, *, interpret: bool = True,
                   batched: bool = False) -> jax.Array:
     """Apply one tiled-BMMC pass. ``x``: (2^n,) or (2^n, d); with
     ``batched=True``, (B, 2^n) or (B, 2^n, d)."""
+    n_rows = 1 << (plan.n - plan.t)
+    _trap_tables([("in_rows", plan.in_rows, n_rows),
+                  ("out_rows", plan.out_rows, n_rows),
+                  ("xor_low", plan.xor_low, plan.row_len),
+                  ("src0", plan.src0, plan.rows_per_tile * plan.row_len)])
     return tiled_permute_tables(
         x, plan.in_rows, plan.out_rows, plan.xor_low, plan.src0,
         geometry=plan_geometry(plan), interpret=interpret, batched=batched,
@@ -751,6 +783,7 @@ def block_geometry(plan) -> tuple:
 
 def block_permute(x: jax.Array, plan, *, interpret: bool = True,
                   batched: bool = False) -> jax.Array:
+    _trap_tables([("src_rows", plan.src_rows, plan.n_rows)])
     return block_permute_tables(x, plan.src_rows,
                                 geometry=block_geometry(plan),
                                 interpret=interpret, batched=batched)
@@ -812,6 +845,7 @@ def lane_geometry(plan) -> tuple:
 
 def lane_permute(x: jax.Array, plan, *, interpret: bool = True,
                  batched: bool = False) -> jax.Array:
+    _trap_tables([("src_lane", plan.src_lane, 1 << plan.t)])
     return lane_permute_tables(x, plan.src_lane,
                                geometry=lane_geometry(plan),
                                interpret=interpret, batched=batched)

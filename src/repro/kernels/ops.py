@@ -136,6 +136,16 @@ def bmmc_permute(x: jax.Array, bmmc: Bmmc, *, t: Optional[int] = None,
     """
     lead = 1 if batched else 0
     assert x.shape[lead] == bmmc.size, (x.shape, bmmc.n)
+    from .. import guard as _guard
+    if _guard.enabled() and engine in ("pallas", "ref"):
+        from ..guard import runtime as _grt
+        if _grt._trace_state_clean():
+            # ring 2: guarded twin — kernel + probes in one executable,
+            # flag readback + pallas → ref fallback at this edge. Under
+            # an outer trace the readback is impossible; fall through.
+            return _grt.guarded_bmmc_permute(
+                x, bmmc, t=t, engine=engine, interpret=interpret,
+                batched=batched)
     if engine == "ref":
         return _ref.bmmc_ref(x, bmmc, batched=batched)
     if bmmc.is_identity_perm():

@@ -31,6 +31,28 @@ def _src_table(rows: tuple, c: int) -> np.ndarray:
     return bmmc_indices(Bmmc(rows, c))
 
 
+def audit_src_table(bmmc: Bmmc) -> np.ndarray:
+    """Guard hook (DESIGN.md §14, ring 1): bounds- and bijection-check
+    the CACHED gather table — the array live calls actually bake in,
+    which a fault (or in-place mutation) can have diverged from what
+    :func:`bmmc_indices` would freshly compute. Raises the typed
+    :class:`repro.guard.DescriptorOOB`; returns the table when sound."""
+    from ..guard.errors import DescriptorOOB
+
+    tab = _src_table(bmmc.rows, bmmc.c)
+    size = bmmc.size
+    if tab.shape != (size,):
+        raise DescriptorOOB(
+            f"ref gather table shape {tab.shape} != ({size},)")
+    if int(tab.min()) < 0 or int(tab.max()) >= size:
+        raise DescriptorOOB(
+            f"ref gather table addresses [{int(tab.min())}, "
+            f"{int(tab.max())}] outside [0, {size})")
+    if np.unique(tab).size != size:
+        raise DescriptorOOB("ref gather table is not a bijection")
+    return tab
+
+
 def bmmc_ref(x: jax.Array, bmmc: Bmmc, *, batched: bool = False) -> jax.Array:
     """Apply the BMMC permutation along the leading axis (pure jnp gather).
 

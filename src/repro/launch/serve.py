@@ -10,6 +10,15 @@ the jit compile, and lumping it in with steady-state latency hid every
 warm-path regression — plus the executor's dispatch counters, rendered
 with ``obs.report()`` at exit. ``--trace OUT.json`` additionally writes
 the Chrome trace.
+
+``--validate`` turns on :mod:`repro.guard` for the whole run (ring 1
+always-on validation plus ring-2 guarded dispatch, DESIGN.md §14).
+Guard resolution is per request: after each prefill/decode step the
+accumulated trap/fallback counters are checked, recovered degradations
+are reported, and an UNRECOVERED trap — a typed
+:class:`repro.guard.GuardError` escaping the engine, fallback included
+— aborts the process with a nonzero exit code instead of serving a
+possibly-wrong token.
 """
 from __future__ import annotations
 
@@ -20,10 +29,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import obs
+from .. import guard, obs
 from ..configs import get_config, reduce_for_smoke
 from ..models import model as M
 from ..models.layers import init_params
+
+
+def _guard_resolve(where: str, base: dict) -> dict:
+    """Per-request guard resolution: report counter deltas since
+    ``base`` (recovered degradations stay a warning; the raising path
+    never reaches here — the typed error aborts in ``main``). Returns
+    the new baseline."""
+    now = guard.stats()
+    trapped = (sum(now["traps"].values())
+               - sum(base["traps"].values()))
+    recovered = now["recovered"] - base["recovered"]
+    if trapped:
+        print(f"guard[{where}]: {trapped} trap(s), "
+              f"{recovered} recovered via engine fallback")
+    return now
 
 
 def main(argv=None):
@@ -38,9 +62,16 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a chrome://tracing span export (implies "
                          "--telemetry)")
+    ap.add_argument("--validate", action="store_true",
+                    help="guarded execution (repro.guard): validate "
+                         "plans, trap faults in-program, degrade "
+                         "pallas->ref; exit nonzero on an unrecovered "
+                         "trap")
     args = ap.parse_args(argv)
     if args.telemetry or args.trace:
         obs.enable(sync=True)
+    if args.validate:
+        guard.enable()
 
     cfg = reduce_for_smoke(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
@@ -54,12 +85,20 @@ def main(argv=None):
         batch["src"] = jax.random.normal(key, (args.batch, cfg.src_len,
                                                cfg.d_model), cfg.dtype)
 
+    gbase = guard.stats() if args.validate else None
+
     t0 = time.time()
-    with obs.span("serve.prefill", batch=args.batch,
-                  prompt_len=args.prompt_len):
-        logits, caches = M.prefill(cfg, params, batch)
-        if obs.sync_enabled():
-            jax.block_until_ready(logits)
+    try:
+        with obs.span("serve.prefill", batch=args.batch,
+                      prompt_len=args.prompt_len):
+            logits, caches = M.prefill(cfg, params, batch)
+            if obs.sync_enabled():
+                jax.block_until_ready(logits)
+    except guard.GuardError as e:
+        raise SystemExit(
+            f"guard[prefill]: unrecovered trap: {type(e).__name__}: {e}")
+    if args.validate:
+        gbase = _guard_resolve("prefill", gbase)
     # grow caches to the full decode horizon
     caches = M.grow_caches(caches, args.prompt_len, total)
     prefill_s = time.time() - t0
@@ -78,8 +117,13 @@ def main(argv=None):
         with obs.span("serve.decode_step", step=i,
                       cache="cold" if i == 0 else "warm"):
             tr = time.perf_counter_ns()
-            logits, caches = decode(params, caches, tok,
-                                    jnp.int32(args.prompt_len + i))
+            try:
+                logits, caches = decode(params, caches, tok,
+                                        jnp.int32(args.prompt_len + i))
+            except guard.GuardError as e:
+                raise SystemExit(
+                    f"guard[decode step {i}]: unrecovered trap: "
+                    f"{type(e).__name__}: {e}")
             if obs.sync_enabled():
                 jax.block_until_ready(logits)
             if obs.enabled():
@@ -89,6 +133,8 @@ def main(argv=None):
                             (time.perf_counter_ns() - tr) / 1e3,
                             phase="decode",
                             cache="cold" if i == 0 else "warm")
+        if args.validate:
+            gbase = _guard_resolve(f"decode step {i}", gbase)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     decode_s = time.time() - t1
@@ -98,6 +144,11 @@ def main(argv=None):
     print(f"decode:  {args.tokens} tokens in {decode_s:.2f}s "
           f"({args.batch * args.tokens / max(decode_s, 1e-9):.1f} tok/s)")
     print("generated ids (first row):", gen[0][:16])
+    if args.validate:
+        gs = guard.stats()
+        print(f"guard: traps={sum(gs['traps'].values())} "
+              f"fallbacks={sum(gs['fallbacks'].values())} "
+              f"recovered={gs['recovered']} (all requests validated)")
     if args.trace:
         print(f"trace written to {obs.export_trace(args.trace)}")
     if obs.enabled():

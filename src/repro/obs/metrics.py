@@ -31,6 +31,19 @@ Counter vocabulary used by the executor stack (DESIGN.md §12):
 * ``optimize.fold_free_folds`` / ``optimize.clusters`` /
   ``optimize.cluster_stages_absorbed`` — planner decisions.
 * ``dispatch.fused_fallback`` — clusters replayed stage-at-a-time.
+* ``guard.trap{kind=..., engine=...}`` — one count per runtime guard
+  flag that fired (``oob`` / ``nonfinite`` / ``parity``; DESIGN.md
+  §14), labeled with the engine it fired on.
+* ``guard.fallback{engine=...}`` / ``guard.recovered`` — graceful
+  degradations: a trapped pallas call re-dispatched through ``engine``
+  (always ``ref`` today), and how many of those fallbacks came back
+  clean.
+* ``guard.raised{error=...}`` — unrecovered traps that escaped as a
+  typed ``GuardError`` (``GuardTrap`` / ``CachePoisoned``), by type.
+
+The guard counters are *also* mirrored into ``repro.guard.stats()``,
+which records regardless of obs being enabled — guards must count even
+when telemetry is off.
 
 Span vocabulary for gradients mirrors the forward's: ``program.vjp`` /
 ``fused.vjp`` / ``stage.vjp`` wrap the corresponding backward rule

@@ -17,6 +17,10 @@ wall-clock spent in ``program.call`` permute executions. Callers that
 ``jax.jit`` the returned function still get the trace-time dispatch
 counters (they fire while the jaxpr is built); the wall-clock pieces
 are skipped under tracing, never measured wrong.
+
+``make_train_step(..., validate=True)`` returns the guarded variant:
+the step body runs under :mod:`repro.guard` and eager calls raise a
+typed ``GuardTrap`` on a nonfinite loss/grad norm (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -78,10 +82,43 @@ def _instrument_step(train_step: Callable) -> Callable:
     return observed
 
 
+def _guard_step(train_step: Callable) -> Callable:
+    """Guarded step variant (DESIGN.md §14): the step body runs with
+    :mod:`repro.guard` rings active — plan validation plus guarded
+    permute dispatch inside the loss — and each *eager* call resolves a
+    step-level health check: a nonfinite loss or gradient norm raises
+    the typed :class:`repro.guard.GuardTrap` instead of silently
+    poisoning the optimizer state. Under an outer jit trace the
+    host-side resolution is skipped (the in-program guards still
+    recorded at trace time); the returned metrics are unchanged."""
+    from .. import guard
+
+    @functools.wraps(train_step)
+    def validated(params, opt_state, batch):
+        with guard.guarded():
+            out = train_step(params, opt_state, batch)
+        if not _trace_state_clean():
+            return out
+        metrics = out[2]
+        bad = [k for k in ("loss", "grad_norm")
+               if k in metrics and not bool(jnp.isfinite(metrics[k]))]
+        if bad:
+            err = guard.GuardTrap(("nonfinite",), "train")
+            err.args = (f"guarded train step: nonfinite {bad} — the "
+                        f"update would poison the optimizer state",)
+            guard._record_trap("nonfinite", "train")
+            guard._record_raised(err)
+            raise err
+        return out
+
+    return validated
+
+
 def make_train_step(cfg: ArchConfig, mesh=None,
                     opt_cfg: Optional[AdamWConfig] = None,
                     grad_accum: int = 1,
-                    loss_fn: Optional[Callable] = None):
+                    loss_fn: Optional[Callable] = None,
+                    validate: bool = False):
     opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
 
     def loss_of(params, batch):
@@ -126,7 +163,10 @@ def make_train_step(cfg: ArchConfig, mesh=None,
                        for g in jax.tree.leaves(grads)))}
         return new_params, new_state, metrics
 
-    return _instrument_step(train_step), opt_cfg
+    step = _instrument_step(train_step)
+    if validate:
+        step = _guard_step(step)
+    return step, opt_cfg
 
 
 def init_opt(cfg: ArchConfig, params, opt_cfg: Optional[AdamWConfig] = None):

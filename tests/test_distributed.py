@@ -79,7 +79,12 @@ print("OK")
 def test_executor_on_fake_devices():
     out = subprocess.run(
         [sys.executable, "-c", EXEC_SCRIPT], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        # JAX_PLATFORMS=cpu: the fake devices are host-platform shards;
+        # without it a scrubbed env lets jax probe real accelerator
+        # backends (a baked-in libtpu stalls ~8 min) and the probe
+        # alone blows the timeout
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
         timeout=500)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout

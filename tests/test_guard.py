@@ -1,0 +1,342 @@
+"""Validated execution: the three guard rings (DESIGN.md §14).
+
+Covers the typed error taxonomy (and its backward-compatible builtin
+bases), ring-1 plan-time validation units, the ring-3 fault-injection
+matrix on both engines (every corruption class caught, zero
+silent-wrong-output cases), the pallas → ref fallback path returning a
+bitwise-correct degraded result, the guards-off no-op contract
+(bitwise-identical outputs, zero guard-counter deltas), and guard-cache
+hygiene through ``clear_caches``/``cache_stats``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import guard
+from repro.combinators import cache_stats, clear_caches, compile_expr
+from repro.combinators import vocab as V
+from repro.combinators.sort import sort_expr
+from repro.core import f2
+from repro.core.bmmc import Bmmc
+from repro.guard import inject
+from repro.kernels import ops, ref
+from repro.kernels.ops import choose_tile
+
+
+@pytest.fixture(autouse=True)
+def _guards_off_between_tests():
+    """Every test starts and ends with guards in the environment-default
+    state and fresh guard stats, so counter-delta assertions are
+    hermetic."""
+    prev = guard.enabled()
+    guard.reset_stats()
+    yield
+    guard._enabled = prev
+    guard.reset_stats()
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_caches():
+    yield
+    clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_taxonomy_types_and_backward_compatible_bases():
+    # every typed error is a GuardError, and each keeps the builtin base
+    # pre-guard call sites raised — existing pytest.raises expectations
+    # (ValueError on bad shapes, KeyError on unknown engines, TypeError
+    # on non-primitive stages, SingularError on singular matrices) keep
+    # passing against guarded code
+    assert issubclass(guard.NotInvertible, guard.GuardError)
+    assert issubclass(guard.NotInvertible, f2.SingularError)
+    assert issubclass(guard.ClassMismatch, ValueError)
+    assert issubclass(guard.DescriptorOOB, IndexError)
+    assert issubclass(guard.BadInput, ValueError)
+    assert issubclass(guard.BadStage, TypeError)
+    assert issubclass(guard.UnknownEngine, KeyError)
+    assert issubclass(guard.CachePoisoned, ValueError)
+    assert issubclass(guard.GuardTrap, RuntimeError)
+    for cls in (guard.ClassMismatch, guard.DescriptorOOB, guard.BadInput,
+                guard.BadStage, guard.UnknownEngine, guard.CachePoisoned):
+        assert issubclass(cls, guard.GuardError)
+
+
+@pytest.mark.tier1
+def test_legacy_raise_sites_keep_builtin_bases():
+    from repro.combinators.execute import get_engine
+
+    with pytest.raises(KeyError):
+        get_engine("no-such-engine")
+    with pytest.raises(guard.UnknownEngine):
+        get_engine("no-such-engine")
+    ce = compile_expr(V.rev(4), engine="ref")
+    with pytest.raises(ValueError):        # legacy expectation
+        ce(jnp.arange(24.0))
+    with pytest.raises(guard.BadInput):    # typed expectation
+        ce(jnp.arange(24.0))
+
+
+# ---------------------------------------------------------------------------
+# ring 1: plan-time validation units
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_verify_bmmc_accepts_sound_rejects_corrupt():
+    b = Bmmc.bit_reverse(6)
+    assert b.verify() is b
+    bad = inject.corrupt_bmmc(b)
+    with pytest.raises(guard.NotInvertible, match="singular"):
+        guard.verify_bmmc(bad)
+    # out-of-range row bits are a distinct corruption from singularity
+    oob = Bmmc.__new__(Bmmc)
+    object.__setattr__(oob, "rows", (1, 2, 4, 1 << 9))
+    object.__setattr__(oob, "c", 0)
+    with pytest.raises(guard.NotInvertible, match="column range"):
+        guard.verify_bmmc(oob)
+
+
+@pytest.mark.tier1
+def test_validate_input_preconditions():
+    assert guard.validate_input((64,), np.float32) == 6
+    assert guard.validate_input((4, 64, 2), np.float32, batched=True) == 6
+    with pytest.raises(guard.BadInput, match="power of 2"):
+        guard.validate_input((24,), np.float32)
+    with pytest.raises(guard.BadInput, match="axis"):
+        guard.validate_input((), np.float32)
+    with pytest.raises(guard.BadInput, match="rank"):
+        guard.validate_input((2, 64, 2, 2), np.float32, batched=True)
+    with pytest.raises(guard.BadInput, match="expects a 2\\^7"):
+        guard.validate_input((64,), np.float32, n=7)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("cls", ["block", "lane", "tiled", "general"])
+def test_plan_audits_pass_sound_plans(cls):
+    import random
+    rng = random.Random(3)
+    n, t = 10, 4
+    ident = tuple(1 << i for i in range(n))
+    if cls == "block":
+        sub = Bmmc.random(n - t, rng)
+        b = Bmmc(ident[:t] + tuple(r << t for r in sub.rows), sub.c << t)
+    elif cls == "lane":
+        sub = Bmmc.random(t, rng)
+        b = Bmmc(tuple(sub.rows) + ident[t:], sub.c)
+    elif cls == "tiled":
+        b = Bmmc.bit_reverse(n)
+    else:
+        b = Bmmc.random(n, rng)
+    kernel = guard.validate_dispatch(b.rows, b.c, t)
+    assert kernel == ops.class_plan(b, t)[0]
+
+
+@pytest.mark.tier1
+def test_audit_catches_swapped_and_oob_descriptors():
+    n = 8
+    b = Bmmc.bit_reverse(n)
+    t = choose_tile(n, 4)
+    # swapped-in-bounds entries: only the SEMANTIC audit can see them
+    with inject.swap_descriptors(b, t):
+        guard.clear_guard_caches()
+        with pytest.raises(guard.DescriptorOOB, match="maps"):
+            guard.validate_dispatch(b.rows, b.c, t)
+    # out-of-bounds entry: the bounds audit sees it first
+    guard.clear_guard_caches()
+    with inject.poison_plan(b, t):
+        guard.clear_guard_caches()
+        with pytest.raises(guard.DescriptorOOB):
+            guard.validate_dispatch(b.rows, b.c, t)
+    guard.clear_guard_caches()
+
+
+@pytest.mark.tier1
+def test_plan_audit_methods_return_self():
+    from repro.core.tiling import plan_block, plan_lane, plan_tiled
+    import random
+    rng = random.Random(0)
+    n, t = 10, 4
+    ident = tuple(1 << i for i in range(n))
+    sub = Bmmc.random(n - t, rng)
+    blk = Bmmc(ident[:t] + tuple(r << t for r in sub.rows), sub.c << t)
+    subl = Bmmc.random(t, rng)
+    lane = Bmmc(tuple(subl.rows) + ident[t:], subl.c)
+    tiled = Bmmc.bit_reverse(n)
+    bp = plan_block(blk, t)
+    lp = plan_lane(lane, t)
+    tp = plan_tiled(tiled, t)
+    assert bp.audit() is bp
+    assert lp.audit() is lp
+    assert tp.audit() is tp
+
+
+@pytest.mark.tier1
+def test_ref_gather_table_audit():
+    b = Bmmc.bit_reverse(7)
+    tab = ref.audit_src_table(b)
+    assert tab.shape == (b.size,)
+    with inject.poison_ref_table(b):
+        with pytest.raises(guard.DescriptorOOB, match="outside"):
+            ref.audit_src_table(b)
+    ref.audit_src_table(b)  # restored on exit
+
+
+# ---------------------------------------------------------------------------
+# ring 3: the fault-injection matrix — every corruption class caught
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("engine", ["ref", "pallas"])
+def test_fault_matrix_catches_every_corruption_class(engine):
+    r = inject.run_fault_matrix(engine=engine)
+    missed = [c for c in r["cases"] if not c["caught"]]
+    assert r["injected"] == len(inject.FAULT_KINDS)
+    assert not missed, f"uncaught fault(s) on {engine}: {missed}"
+    assert r["caught"] == r["injected"]
+    silent = [c for c in r["cases"] if "SILENT" in c["how"]]
+    assert not silent, f"silent wrong output on {engine}: {silent}"
+
+
+# ---------------------------------------------------------------------------
+# ring 2: the fallback state machine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_pallas_trap_degrades_to_ref_with_bitwise_parity():
+    n = 6
+    x = jnp.arange(1 << n, dtype=jnp.float32)
+    b = Bmmc.bit_reverse(n)
+    t = choose_tile(n, 4)
+    want = np.asarray(ref.bmmc_ref(x, b))
+    ce = compile_expr(V.bit_reverse(n), engine="pallas", optimize=False)
+    with guard.guarded():
+        ce(x)  # warm + ring-1-validate the clean plans
+        base = guard.stats()
+        with inject.poison_plan(b, t):
+            inject._clear_runtime_only()  # re-bake the poisoned tables
+            got = ce(x)
+        now = guard.stats()
+    # degraded result is bitwise-equal to the ref oracle
+    assert got.dtype == x.dtype
+    assert np.array_equal(np.asarray(got).view(np.uint8),
+                          want.view(np.uint8))
+    # and the machine recorded the trap -> fallback -> recovery arc
+    assert sum(now["traps"].values()) > sum(base["traps"].values())
+    assert now["fallbacks"].get("ref", 0) > base["fallbacks"].get("ref", 0)
+    assert now["recovered"] > base["recovered"]
+    inject._fresh_guard_state()
+
+
+@pytest.mark.tier1
+def test_ref_trap_has_no_fallback_and_fails_loudly():
+    n = 6
+    x = jnp.arange(1 << n, dtype=jnp.float32)
+    b = Bmmc.bit_reverse(n)
+    ce = compile_expr(V.bit_reverse(n), engine="ref", optimize=False)
+    with guard.guarded():
+        ce(x)
+        with inject.poison_ref_table(b):
+            inject._clear_runtime_only()
+            with pytest.raises(guard.GuardTrap, match="no fallback"):
+                ce(x)
+        now = guard.stats()
+    assert now["raised"].get("GuardTrap", 0) >= 1
+    inject._fresh_guard_state()
+
+
+@pytest.mark.tier1
+def test_guarded_bmmc_permute_matches_ref_and_flags_decode():
+    n = 7
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(1 << n),
+                    dtype=jnp.float32)
+    b = Bmmc.from_perm([(i + 3) % n for i in range(n)], c=5)
+    want = np.asarray(ref.bmmc_ref(x, b))
+    with guard.guarded():
+        got = ops.bmmc_permute(x, b)
+    assert np.array_equal(np.asarray(got), want)
+    assert guard.resolve_flags(0) == ()
+    assert guard.resolve_flags(1) == ("oob",)
+    assert guard.resolve_flags(7) == ("nonfinite", "oob", "parity")
+
+
+@pytest.mark.tier1
+def test_guarded_train_step_traps_nonfinite_loss():
+    from repro.train.step import _guard_step
+
+    def bad_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(np.nan),
+                                   "grad_norm": jnp.float32(1.0)}
+
+    def good_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(0.5),
+                                   "grad_norm": jnp.float32(1.0)}
+
+    assert _guard_step(good_step)(0, 0, 0)[2]["loss"] == 0.5
+    with pytest.raises(guard.GuardTrap, match="nonfinite"):
+        _guard_step(bad_step)(0, 0, 0)
+    assert guard.stats()["traps"].get(("nonfinite", "train"), 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# guards-off no-op contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_guards_off_is_a_bitwise_noop_with_zero_counters():
+    n = 8
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(1 << n),
+                    dtype=jnp.float32)
+    f = compile_expr(sort_expr(n), engine="pallas")
+    guard.disable()
+    guard.reset_stats()
+    base = guard.stats()
+    y_off = np.asarray(f(x))
+    after = guard.stats()
+    assert after == base  # no trap/fallback/raise counters moved
+    with guard.guarded():
+        y_on = np.asarray(f(x))
+    assert np.array_equal(y_off.view(np.uint8), y_on.view(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# cache hygiene (mirrors test_class_dispatch's pattern)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_guard_caches_in_cache_stats_and_cleared():
+    clear_caches()
+    st = cache_stats()
+    for name in ("guard_validate", "guard_dispatch", "guard_program",
+                 "guard_permute"):
+        assert name in st, f"{name} missing from cache_stats()"
+        assert st[name].currsize == 0
+    n = 6
+    x = jnp.arange(1 << n, dtype=jnp.float32)
+    ce = compile_expr(V.bit_reverse(n), engine="pallas", optimize=False)
+    with guard.guarded():
+        ce(x)
+        ops.bmmc_permute(x, Bmmc.bit_reverse(n))
+    st = cache_stats()
+    assert st["guard_validate"].currsize > 0
+    assert st["guard_dispatch"].currsize > 0
+    assert st["guard_program"].currsize > 0
+    assert st["guard_permute"].currsize > 0
+    with guard.guarded():
+        ce(x)  # warm call: validation must memo-hit, not re-prove
+    # warm calls land on the identity front memo, so the lru sees no
+    # new misses (re-proving) and no growth — only the memo answers
+    st2 = cache_stats()
+    assert st2["guard_validate"].misses == st["guard_validate"].misses
+    assert st2["guard_validate"].currsize == st["guard_validate"].currsize
+    clear_caches()
+    st = cache_stats()
+    for name in ("guard_validate", "guard_dispatch", "guard_program",
+                 "guard_permute"):
+        assert st[name].currsize == 0
