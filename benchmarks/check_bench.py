@@ -43,6 +43,15 @@ fallback), zero silent-wrong-output cases — and ``*/overhead`` rows'
 same-machine paired measurement, so machine noise largely cancels)
 must stay <= ``GUARD_OVERHEAD_TOL``.
 
+Store gates (PR 9, DESIGN.md §15): the ``*/warmstart`` row must report
+``disk_hit_rate=1.0`` and ``plans_built=0`` (a fresh process booting
+from a populated store serves every plan from disk and compiles none)
+and a ``warmstart_speedup`` (cold / disk-warm first-call latency, a
+paired same-machine measurement) at least ``WARMSTART_MIN_SPEEDUP``;
+the ``store/disk/fault_injection`` row rides the generic
+fault-injection gate — every injected disk fault (truncation, bit
+flip, version skew, torn write, quarantine race) caught.
+
 Other wall-clock rows are reported but never gated (CI machines are
 noisy); rows whose ``us`` is null carry no wall-clock measurement at
 all (model-only/telemetry rows) and are explicitly exempt from any
@@ -66,8 +75,16 @@ DRIFT_TOL = 5.0
 # ratio is a paired same-machine measurement, so noise mostly cancels)
 GUARD_OVERHEAD_TOL = 1.05
 
+# a disk-warm boot must be at least this much faster than a cold boot
+# (ISSUE 9: cold/disk-warm is a paired same-machine first-call ratio —
+# structurally >= 1 since disk-warm skips planning, so the floor sits
+# just under 1.0 to absorb shared-CI-machine noise, and the real gates
+# are the deterministic disk_hit_rate == 1 / plans_built == 0 pair)
+WARMSTART_MIN_SPEEDUP = 0.98
+
 _GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry",
-                   "/bwd_telemetry", "/overhead", "/fault_injection")
+                   "/bwd_telemetry", "/overhead", "/fault_injection",
+                   "/warmstart")
 
 
 def _has_timing(row: dict) -> bool:
@@ -176,6 +193,37 @@ def check(baseline: dict, current: dict) -> list:
                     f"{name}: {caught}/{injected} injected faults caught "
                     f"({'; '.join(missed) or 'no per-kind detail'}) — an "
                     "uncaught fault is a silent-wrong-output path")
+            continue
+        if name.endswith("/warmstart"):
+            # the durable-store warm-start contract (ISSUE 9): a fresh
+            # process booting from a populated store must serve 100%
+            # disk hits, compile zero plans, and be no slower than a
+            # cold boot — integrity re-audits included
+            d = _derived(row)
+            try:
+                hit_rate = float(d.get("disk_hit_rate"))
+                built = int(d.get("plans_built"))
+                speedup = float(d.get("warmstart_speedup"))
+            except (TypeError, ValueError):
+                failures.append(
+                    f"{name}: warmstart row missing parseable "
+                    f"disk_hit_rate/plans_built/warmstart_speedup")
+                continue
+            if hit_rate < 1.0:
+                failures.append(
+                    f"{name}: disk-warm boot hit rate {hit_rate:.3f} < 1.0 "
+                    "(a warm process re-planned something the store "
+                    "should have served)")
+            if built != 0:
+                failures.append(
+                    f"{name}: disk-warm boot compiled {built} plans "
+                    "(gate: zero plans compiled on second boot)")
+            if speedup < WARMSTART_MIN_SPEEDUP:
+                failures.append(
+                    f"{name}: disk-warm vs cold speedup {speedup:.3f} "
+                    f"below the {WARMSTART_MIN_SPEEDUP} floor (loading + "
+                    "re-auditing plans should not cost more than "
+                    "planning them)")
             continue
         if name.endswith("/overhead"):
             d = _derived(row)

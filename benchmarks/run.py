@@ -27,12 +27,12 @@ def main() -> None:
                     help="comma-separated subset: "
                          "fig9,fig10,transpose,sort,khc,roofline,"
                          "combinators,autodiff,stagefusion,classdispatch,"
-                         "guard")
+                         "guard,store")
     ap.add_argument("--smoke", action="store_true",
                     help="fast sanity subset (combinators + autodiff + "
-                         "stagefusion + classdispatch + guard; pairs with "
-                         "`pytest -m tier1` as the quick tier-1 smoke "
-                         "entry point)")
+                         "stagefusion + classdispatch + guard + store; "
+                         "pairs with `pytest -m tier1` as the quick tier-1 "
+                         "smoke entry point)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows + metadata as JSON")
     ap.add_argument("--trace", default=None, metavar="TRACE.json",
@@ -48,7 +48,7 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only else None
     if args.smoke:
         want = {"combinators", "autodiff", "stagefusion", "classdispatch",
-                "guard"}
+                "guard", "store"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -85,6 +85,9 @@ def main() -> None:
     if want is None or "guard" in want:
         from . import guard_overhead
         suites.append(guard_overhead.rows)
+    if want is None or "store" in want:
+        from . import store_warmstart
+        suites.append(store_warmstart.rows)
     collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():
@@ -120,6 +123,9 @@ def main() -> None:
             # modeled-vs-measured accounting per workload: the input to
             # check_bench's model-honesty gate
             "model_error": _model_error_section(collected),
+            # durable-store warm-start + fault-coverage accounting: the
+            # input to check_bench's store gates
+            "store": _store_section(collected),
         }
         if args.trace:
             from repro import obs
@@ -129,6 +135,26 @@ def main() -> None:
             f.write("\n")
         print(f"# wrote {len(collected)} rows to {args.json}",
               file=sys.stderr)
+
+
+def _store_section(rows: list) -> list:
+    """Lift ``store/*`` gate rows (``/warmstart``, ``/fault_injection``)
+    into structured records."""
+    out = []
+    for row in rows:
+        if not row["name"].startswith("store/"):
+            continue
+        if not row["name"].endswith(("/warmstart", "/fault_injection")):
+            continue
+        rec = {"row": row["name"]}
+        for part in row["derived"].split(";"):
+            k, _, v = part.partition("=")
+            try:
+                rec[k] = float(v)
+            except ValueError:
+                rec[k] = v
+        out.append(rec)
+    return out
 
 
 def _model_error_section(rows: list) -> list:

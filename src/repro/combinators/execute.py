@@ -220,17 +220,8 @@ def _fused_entries(plans, computes):
     return tuple(entries)
 
 
-@functools.lru_cache(maxsize=256)
-def _fused_plan_cached(fs: FusedStage, t: int):
-    """(pass plans, per-compute ComputeTables-or-Map entries) for a
-    cluster, or None when the megakernel cannot run it at this tile
-    parameter (no pass plannable, or a compute not tile-local in the
-    first pass — possible when the runtime ``t`` differs from the
-    clustering ``t``). The composed BMMC runs as ONE tiled pass (classic
-    witness columns or generalized witness directions), falling back to
-    the §5.2 two-pass factorization only for t > n/2; computes always
-    ride the FIRST pass's tiles (they are pulled back to input space,
-    where pass 1 reads).
+def _build_fused_plan(fs: FusedStage, t: int):
+    """Plan a cluster from scratch (the store's ``build`` rung).
 
     A classic plan's tile span can be narrower than the maximal
     ``ker(A[t:, :])`` span the clustering validated against; when a
@@ -250,6 +241,29 @@ def _fused_plan_cached(fs: FusedStage, t: int):
     if entries is None:
         return None
     return tuple(plans), tuple(entries)
+
+
+@functools.lru_cache(maxsize=256)
+def _fused_plan_cached(fs: FusedStage, t: int):
+    """(pass plans, per-compute ComputeTables-or-Map entries) for a
+    cluster, or None when the megakernel cannot run it at this tile
+    parameter (no pass plannable, or a compute not tile-local in the
+    first pass — possible when the runtime ``t`` differs from the
+    clustering ``t``). The composed BMMC runs as ONE tiled pass (classic
+    witness columns or generalized witness directions), falling back to
+    the §5.2 two-pass factorization only for t > n/2; computes always
+    ride the FIRST pass's tiles (they are pulled back to input space,
+    where pass 1 reads).
+
+    Backed by the durable plan store when one is configured
+    (``REPRO_STORE``): only the offline tables travel to disk — compute
+    entries are re-seated against this cluster's live ``computes`` on
+    decode, so Map callables never serialize — and every loaded plan is
+    re-audited through guard ring 1 before it is trusted."""
+    from .. import store as _store
+
+    return _store.fused_plan_through(
+        fs, t, lambda: _build_fused_plan(fs, t))
 
 
 @functools.lru_cache(maxsize=64)
@@ -1270,6 +1284,12 @@ def cache_stats() -> Dict[str, CacheStats]:
     from ..guard.validate import guard_cache_stats
     for name, info in guard_cache_stats().items():
         stats[name] = CacheStats(*info)
+    from .. import store as _store
+    ss = _store.stats()
+    st = _store.active()
+    stats["store"] = CacheStats(
+        hits=ss["hit"], misses=ss["miss"], maxsize=None,
+        currsize=st.entry_count() if st is not None else 0)
     return stats
 
 
@@ -1472,8 +1492,9 @@ def clear_caches() -> None:
     ops._class_plan_cached.cache_clear()
     from ..guard.validate import clear_guard_caches
     clear_guard_caches()
-    from .. import guard
+    from .. import guard, store
     guard.reset_stats()
+    store.reset_stats()
     obs.reset()
 
 

@@ -49,7 +49,8 @@ from .errors import (BadInput, BadStage, CachePoisoned, ClassMismatch,
 
 _state = threading.local()
 _STATS_LOCK = threading.Lock()
-_STATS: dict = {"traps": {}, "fallbacks": {}, "recovered": 0, "raised": {}}
+_STATS: dict = {"traps": {}, "fallbacks": {}, "recovered": 0, "raised": {},
+                "store_quarantined": {}}
 
 _ENV_FLAG = os.environ.get("REPRO_GUARD", "").strip().lower() in (
     "1", "true", "on", "yes")
@@ -117,16 +118,27 @@ def _record_raised(err: BaseException) -> None:
     _om.inc("guard.raised", error=name)
 
 
+def _record_store_quarantine(reason: str) -> None:
+    """Mirror of the plan store's quarantine events: a quarantined disk
+    entry IS a CachePoisoned detection, so it shows up in the guard
+    report alongside traps and fallbacks (DESIGN.md §15)."""
+    with _STATS_LOCK:
+        q = _STATS["store_quarantined"]
+        q[reason] = q.get(reason, 0) + 1
+
+
 def stats() -> dict:
     """Guard-subsystem counters (always recorded while guards are on,
     independent of :mod:`repro.obs` being enabled): per-(kind, engine)
     trap counts, per-engine fallback counts, recovered-request count,
-    and per-type raised-error counts."""
+    per-type raised-error counts, and per-reason plan-store quarantine
+    counts (mirrored from :func:`repro.store.stats`)."""
     with _STATS_LOCK:
         return {"traps": dict(_STATS["traps"]),
                 "fallbacks": dict(_STATS["fallbacks"]),
                 "recovered": _STATS["recovered"],
-                "raised": dict(_STATS["raised"])}
+                "raised": dict(_STATS["raised"]),
+                "store_quarantined": dict(_STATS["store_quarantined"])}
 
 
 def reset_stats() -> None:
@@ -134,6 +146,7 @@ def reset_stats() -> None:
         _STATS["traps"].clear()
         _STATS["fallbacks"].clear()
         _STATS["raised"].clear()
+        _STATS["store_quarantined"].clear()
         _STATS["recovered"] = 0
 
 

@@ -33,8 +33,11 @@ import numpy as np
 from ..core.bmmc import Bmmc
 from .errors import GuardError
 
+STORE_FAULT_KINDS = ("disk_truncate", "disk_bitflip", "disk_version_skew",
+                     "disk_torn_write", "disk_quarantine_race")
+
 FAULT_KINDS = ("bitflip_bmmc", "swap_descriptor", "poison_cache",
-               "truncate_parity_table", "bad_input")
+               "truncate_parity_table", "bad_input") + STORE_FAULT_KINDS
 
 
 def corrupt_bmmc(bmmc: Bmmc) -> Bmmc:
@@ -147,8 +150,186 @@ def truncate_parity_table(fs, t: int):
 
 
 # ---------------------------------------------------------------------------
-# the injection harness
+# disk faults (the durable plan store; DESIGN.md §15)
 # ---------------------------------------------------------------------------
+
+def _skewed_entry(data: bytes) -> bytes:
+    """Re-sign ``data``'s header with a bumped schema version — an
+    *intact* entry from a different planner generation, the one fault
+    class that must read as a miss, never a quarantine."""
+    import json
+    import struct
+
+    from ..store import codec as _codec
+
+    hlen, _ = struct.unpack_from(_codec._HEADER_FMT, data, len(_codec.MAGIC))
+    hj = data[_codec._PREFIX_LEN:_codec._PREFIX_LEN + hlen]
+    header = json.loads(hj)
+    header["schema"] = header["schema"] + 1
+    hj2 = json.dumps(header, sort_keys=True).encode("utf-8")
+    return b"".join((
+        _codec.MAGIC,
+        struct.pack(_codec._HEADER_FMT, len(hj2), _codec._fp_bytes(hj2)),
+        hj2, data[_codec._PREFIX_LEN + hlen:]))
+
+
+@contextlib.contextmanager
+def corrupt_store_entry(st, key: str, mode: str):
+    """Corrupt one on-disk entry the way a real disk fault would:
+    ``truncate`` (short file), ``bitflip`` (one payload bit), ``skew``
+    (intact entry, older schema), ``torn`` (a partial write that landed
+    at the final path — what the tmp+fsync+rename protocol prevents the
+    store itself from ever producing). The CLEAN bytes are written back
+    on exit, whether or not the corrupt entry was quarantined and
+    rebuilt in between."""
+    path = st.path_for(key)
+    with open(path, "rb") as f:
+        clean = f.read()
+    if mode == "truncate":
+        bad = clean[:max(1, len(clean) // 3)]
+    elif mode == "bitflip":
+        flipped = clean[-1] ^ 0x10            # last payload byte
+        bad = clean[:-1] + bytes([flipped])
+    elif mode == "skew":
+        bad = _skewed_entry(clean)
+    elif mode == "torn":
+        bad = clean[:len(clean) // 2][:200]   # torn mid-header
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with open(path, "wb") as f:
+        f.write(bad)
+    try:
+        yield path
+    finally:
+        st.write_bytes(key, clean)
+
+
+def _clear_replan_path():
+    """Clear every in-process cache between a disk corruption and the
+    next call, so the executor's next plan lookup genuinely reaches the
+    store: plan lrus, kernel/program executables (tables are baked into
+    traces), and the guard caches (ring 1 re-proves on the reload)."""
+    from ..combinators import execute as _ex
+    from ..kernels import ops
+
+    ops._class_plan_cached.cache_clear()
+    ops._plans_cached.cache_clear()
+    _ex._fused_plan_cached.cache_clear()
+    _ex._program_executable.cache_clear()
+    _ex._geom_executable.cache_clear()
+    _ex._block_executable.cache_clear()
+    _ex._lane_executable.cache_clear()
+    _fresh_guard_state()
+
+
+def run_disk_fault_matrix(n: int = 6) -> dict:
+    """Inject every disk-fault class against a store-backed pallas
+    engine and report ``{injected, caught, cases}`` in the
+    :func:`run_fault_matrix` vocabulary. A fault is caught when the
+    degradation ladder holds: the corruption is *detected* (quarantine
+    + ``CachePoisoned`` classification, or a version-skew miss), the
+    call recovers bitwise-equal to fresh planning, and a racing
+    quarantine resolves exactly once. Always drives the pallas engine —
+    the store holds pallas plans; the ref engine never consults it."""
+    import tempfile
+    import threading
+
+    import jax.numpy as jnp
+
+    from .. import store as _store
+    from ..combinators import vocab as V
+    from ..combinators.execute import compile_expr
+    from ..kernels import ops, ref as _ref
+
+    x = jnp.arange(1 << n, dtype=jnp.float32)
+    bmmc = Bmmc.bit_reverse(n)
+    t = ops.choose_tile(n, 4)
+    oracle = np.asarray(_ref.bmmc_ref(x, bmmc))
+    cases = []
+
+    def record(kind, caught, how):
+        cases.append({"kind": kind, "caught": bool(caught), "how": how})
+
+    prev = _store.active()
+    root = tempfile.mkdtemp(prefix="repro-store-fault-")
+    try:
+        st = _store.configure(root)
+        _clear_replan_path()
+        ce = compile_expr(V.bit_reverse(n), engine="pallas", optimize=False)
+        ce(x)  # populate the store
+        key = _store.class_key(bmmc.rows, bmmc.c, t)
+        if _store.active().read_bytes(key) is None:
+            raise RuntimeError("store population failed: no entry for key")
+
+        for kind, mode in (("disk_truncate", "truncate"),
+                           ("disk_bitflip", "bitflip"),
+                           ("disk_version_skew", "skew"),
+                           ("disk_torn_write", "torn")):
+            base = _store.stats()
+            try:
+                with corrupt_store_entry(st, key, mode):
+                    _clear_replan_path()
+                    y = ce(x)
+                now = _store.stats()
+                ok = np.array_equal(np.asarray(y), oracle)
+                if mode == "skew":
+                    detected = (now["version_skew"] > base["version_skew"]
+                                and now["quarantined"] == base["quarantined"])
+                    hownote = "skew-miss + replanned"
+                else:
+                    detected = now["quarantined"] > base["quarantined"]
+                    hownote = "quarantined + replanned"
+                record(kind, ok and detected,
+                       hownote if ok and detected
+                       else ("not detected" if ok
+                             else "SILENT WRONG OUTPUT"))
+            except GuardError as e:
+                record(kind, True, type(e).__name__)
+
+        # racing readers on one corrupt entry: every reader must detect
+        # and rebuild correctly; the quarantine rename resolves ONCE
+        base = _store.stats()
+        fresh = ops._build_class_plan(bmmc.rows, bmmc.c, t)
+        try:
+            with corrupt_store_entry(st, key, "bitflip"):
+                _clear_replan_path()
+                results, errs = [], []
+
+                def reader():
+                    try:
+                        results.append(_store.class_plan_through(
+                            bmmc.rows, bmmc.c, t,
+                            lambda: ops._build_class_plan(
+                                bmmc.rows, bmmc.c, t)))
+                    except BaseException as e:  # noqa: BLE001
+                        errs.append(e)
+
+                threads = [threading.Thread(target=reader)
+                           for _ in range(4)]
+                for th in threads:
+                    th.start()
+                for th in threads:
+                    th.join()
+            from .validate import plan_fingerprint as _pfp
+            now = _store.stats()
+            want_fp = _pfp(*fresh)
+            same = all(r[0] == fresh[0] and _pfp(*r) == want_fp
+                       for r in results)
+            quarantines = now["quarantined"] - base["quarantined"]
+            ok = (not errs and len(results) == 4 and same
+                  and quarantines == 1)
+            record("disk_quarantine_race", ok,
+                   "single quarantine, all readers recovered" if ok
+                   else (f"errors={[type(e).__name__ for e in errs]} "
+                         f"quarantines={quarantines}"))
+        except GuardError as e:
+            record("disk_quarantine_race", True, type(e).__name__)
+    finally:
+        _store.configure(prev.root if prev is not None else None)
+        _clear_replan_path()
+
+    caught = sum(1 for c in cases if c["caught"])
+    return {"injected": len(cases), "caught": caught, "cases": cases}
 
 def _fresh_guard_state():
     """Clear every cache a fault could hide behind: guard validation +
@@ -275,6 +456,10 @@ def run_fault_matrix(engine: str = "pallas", n: int = 6) -> dict:
             record("bad_input", False, "accepted a non-power-of-2 input")
         except GuardError as e:
             record("bad_input", True, type(e).__name__)
+
+    # 6-10. durable-store faults: truncation, bit flip, version skew,
+    # torn write, quarantine race (ring-1-on-load; store-engine pallas)
+    cases.extend(run_disk_fault_matrix(n=n)["cases"])
 
     caught = sum(1 for c in cases if c["caught"])
     return {"injected": len(cases), "caught": caught, "cases": cases}

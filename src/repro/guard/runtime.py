@@ -218,18 +218,21 @@ def _guarded_executable(prog: tuple, t, engine: str, batched: bool):
 # (and the same id-aliasing defense) as validate._VALIDATED_FAST:
 # resolved program tuples are stable lru-cached objects, and skipping
 # the deep lru-key hash on warm calls is what keeps guarded dispatch
-# inside the ≤5% overhead budget. Cleared alongside the lru caches in
-# validate.clear_guard_caches and inject._clear_runtime_only.
-_EXEC_MEMO: dict = {}
+# inside the ≤5% overhead budget. Bounded (LRU) so a long-lived serving
+# process can't grow it without limit; cleared alongside the lru caches
+# in validate.clear_guard_caches and inject._clear_runtime_only.
+from .validate import IdentityMemo as _IdentityMemo  # noqa: E402
+
+_EXEC_MEMO = _IdentityMemo(maxsize=1024)
 
 
 def _guarded_exec_fast(prog: tuple, t, engine: str, batched: bool):
     key = (id(prog), t, engine, batched)
-    hit = _EXEC_MEMO.get(key)
-    if hit is not None and hit[0] is prog:
-        return hit[1]
+    hit = _EXEC_MEMO.lookup(key, prog)
+    if hit is not None:
+        return hit
     ex = _guarded_executable(prog, t, engine, batched)
-    _EXEC_MEMO[key] = (prog, ex)
+    _EXEC_MEMO.store(key, prog, ex)
     return ex
 
 

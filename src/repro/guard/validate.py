@@ -455,22 +455,65 @@ def validate_program(prog: tuple, t) -> int:
     return audited
 
 
+class IdentityMemo:
+    """Bounded identity-keyed front memo with LRU eviction.
+
+    Keys on ``id(owner)`` and stores a strong reference to the owner,
+    so a stale id can never alias a different (garbage-collected)
+    object: :meth:`lookup`'s ``is`` check proves the key still names
+    the memoized owner. Bounded (``maxsize``, least-recently-used out
+    first) so a long-lived serving process sweeping many programs does
+    not grow without limit — the strong owner references would
+    otherwise pin every program ever validated."""
+
+    def __init__(self, maxsize: int):
+        import collections
+        self.maxsize = maxsize
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key, owner):
+        hit = self._d.get(key)
+        if hit is not None and hit[0] is owner:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        return None
+
+    def store(self, key, owner, value) -> None:
+        self._d[key] = (owner, value)
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def cache_info(self) -> tuple:
+        """(hits, misses, maxsize, currsize) — the lru_cache vocabulary,
+        so ``cache_stats()`` folds these in uniformly."""
+        return (self.hits, self.misses, self.maxsize, len(self._d))
+
+
 # Identity-keyed front memo over validate_program. Resolved program
 # tuples are themselves lru-cached (execute._clustered_cached), so the
 # same object arrives on every warm call — but hashing the deep
 # (stages × BMMC-rows) lru key costs tens of µs per lookup, which alone
-# would blow the ≤5% warm-overhead budget on small programs. The memo
-# keys on id() and stores a strong reference to the tuple, so a stale
-# id can never alias a different (garbage-collected) program: the
-# ``is`` check proves the key still names the validated object.
-_VALIDATED_FAST: dict = {}
+# would blow the ≤5% warm-overhead budget on small programs.
+_VALIDATED_FAST = IdentityMemo(maxsize=2048)
 
 
 def validate_program_fast(prog: tuple, t) -> None:
     key = (id(prog), t)
-    if _VALIDATED_FAST.get(key) is not prog:
+    if _VALIDATED_FAST.lookup(key, prog) is None:
         validate_program(prog, t)
-        _VALIDATED_FAST[key] = prog
+        _VALIDATED_FAST.store(key, prog, True)
 
 
 # ---------------------------------------------------------------------------
@@ -481,10 +524,12 @@ def guard_cache_stats() -> dict:
     """Guard-cache stats in the executor's ``CacheStats`` vocabulary —
     merged into :func:`repro.combinators.execute.cache_stats`."""
     out = {"guard_validate": validate_program.cache_info(),
-           "guard_dispatch": validate_dispatch.cache_info()}
+           "guard_dispatch": validate_dispatch.cache_info(),
+           "guard_validate_fast": _VALIDATED_FAST.cache_info()}
     from . import runtime as _rt
     out["guard_program"] = _rt._guarded_executable.cache_info()
     out["guard_permute"] = _rt._guarded_permute_executable.cache_info()
+    out["guard_exec_memo"] = _rt._EXEC_MEMO.cache_info()
     return out
 
 

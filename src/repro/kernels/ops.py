@@ -69,12 +69,9 @@ def _plans_cached(rows: tuple, c: int, t: int) -> tuple:
     return tuple(plan_bmmc(Bmmc(rows, c), t))
 
 
-@functools.lru_cache(maxsize=512)
-def _class_plan_cached(rows: tuple, c: int, t: int) -> tuple:
-    """(kernel name, plan payload) for the class dispatch — the offline
-    decision shared by `bmmc_permute` and the combinator executor. The
-    payload is the fast-path plan for "block"/"lane", the tiled pass
-    tuple otherwise."""
+def _build_class_plan(rows: tuple, c: int, t: int) -> tuple:
+    """Plan from scratch (the store's ``build`` rung): derive the class
+    dispatch and construct its payload tables."""
     bmmc = Bmmc(rows, c)
     kernel = dispatch_kernel(bmmc, t)
     if kernel == "none":
@@ -84,6 +81,21 @@ def _class_plan_cached(rows: tuple, c: int, t: int) -> tuple:
     if kernel == "lane":
         return (kernel, plan_lane(bmmc, t))
     return (kernel, _plans_cached(rows, c, t))
+
+
+@functools.lru_cache(maxsize=512)
+def _class_plan_cached(rows: tuple, c: int, t: int) -> tuple:
+    """(kernel name, plan payload) for the class dispatch — the offline
+    decision shared by `bmmc_permute` and the combinator executor. The
+    payload is the fast-path plan for "block"/"lane", the tiled pass
+    tuple otherwise. Backed by the durable plan store when one is
+    configured (``REPRO_STORE``): a disk hit is decoded and re-audited
+    through guard ring 1 before it is trusted; integrity failures
+    quarantine the entry and fall through to fresh planning."""
+    from .. import store as _store
+
+    return _store.class_plan_through(
+        rows, c, t, lambda: _build_class_plan(rows, c, t))
 
 
 def bmmc_plans(bmmc: Bmmc, t: int):

@@ -19,6 +19,13 @@ are reported, and an UNRECOVERED trap — a typed
 :class:`repro.guard.GuardError` escaping the engine, fallback included
 — aborts the process with a nonzero exit code instead of serving a
 possibly-wrong token.
+
+``--store PATH`` points the process at a durable plan store
+(DESIGN.md §15): compiled permutation plans load from disk instead of
+re-planning on boot, every loaded plan re-audits through ring 1, and
+per-request ``store.hit/miss/quarantined`` deltas print next to the
+guard resolution report. ``examples/serve_batch.py`` drives the cold
+vs disk-warm first-request comparison end to end.
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import guard, obs
+from .. import guard, obs, store as _store
 from ..configs import get_config, reduce_for_smoke
 from ..models import model as M
 from ..models.layers import init_params
@@ -50,6 +57,22 @@ def _guard_resolve(where: str, base: dict) -> dict:
     return now
 
 
+def _store_resolve(where: str, base: dict) -> dict:
+    """Per-request plan-store resolution, printed next to the guard
+    report: hit/miss/quarantined deltas since ``base``. A quarantine
+    is never silent — the corrupt entry was refused, replanned past,
+    and left in ``quarantine/`` for post-mortem."""
+    now = _store.stats()
+    hit = now["hit"] - base["hit"]
+    miss = now["miss"] - base["miss"]
+    quarantined = now["quarantined"] - base["quarantined"]
+    if hit or miss or quarantined:
+        extra = (f", {quarantined} QUARANTINED (corrupt entry refused, "
+                 f"replanned)" if quarantined else "")
+        print(f"store[{where}]: {hit} hit / {miss} miss{extra}")
+    return now
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mistral-nemo-12b")
@@ -67,13 +90,40 @@ def main(argv=None):
                          "plans, trap faults in-program, degrade "
                          "pallas->ref; exit nonzero on an unrecovered "
                          "trap")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="durable plan store root (DESIGN.md §15): load "
+                         "compiled permutation plans from disk, report "
+                         "per-request hit/miss/quarantine deltas")
+    ap.add_argument("--head-shuffle", default=None, metavar="ENGINE",
+                    choices=("ref", "pallas"),
+                    help="enable the BMMC kv-head shuffle through ENGINE "
+                         "(needs power-of-two n_kv_heads >= 2); with "
+                         "'pallas' the serving path exercises compiled "
+                         "permutation plans, so --store traffic is real")
+    ap.add_argument("--kv-heads", type=int, default=None, metavar="N",
+                    help="override n_kv_heads (power of two; n_heads is "
+                         "raised to match if needed) — the smoke configs "
+                         "reduce to 2 kv heads, whose 1-bit shuffle is "
+                         "identity, so --head-shuffle demos want >= 4")
     args = ap.parse_args(argv)
     if args.telemetry or args.trace:
         obs.enable(sync=True)
     if args.validate:
         guard.enable()
+    if args.store:
+        _store.configure(args.store)
+        _store.reset_stats()
 
     cfg = reduce_for_smoke(get_config(args.arch))
+    if args.kv_heads or args.head_shuffle:
+        import dataclasses
+        repl = {}
+        if args.kv_heads:
+            repl["n_kv_heads"] = args.kv_heads
+            repl["n_heads"] = max(cfg.n_heads, args.kv_heads)
+        if args.head_shuffle:
+            repl["head_shuffle"] = args.head_shuffle
+        cfg = dataclasses.replace(cfg, **repl)
     key = jax.random.PRNGKey(args.seed)
     params = M.init(cfg, key)
     total = args.prompt_len + args.tokens
@@ -86,6 +136,7 @@ def main(argv=None):
                                                cfg.d_model), cfg.dtype)
 
     gbase = guard.stats() if args.validate else None
+    sbase = _store.stats() if args.store else None
 
     t0 = time.time()
     try:
@@ -99,6 +150,8 @@ def main(argv=None):
             f"guard[prefill]: unrecovered trap: {type(e).__name__}: {e}")
     if args.validate:
         gbase = _guard_resolve("prefill", gbase)
+    if args.store:
+        sbase = _store_resolve("prefill", sbase)
     # grow caches to the full decode horizon
     caches = M.grow_caches(caches, args.prompt_len, total)
     prefill_s = time.time() - t0
@@ -135,6 +188,8 @@ def main(argv=None):
                             cache="cold" if i == 0 else "warm")
         if args.validate:
             gbase = _guard_resolve(f"decode step {i}", gbase)
+        if args.store:
+            sbase = _store_resolve(f"decode step {i}", sbase)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     decode_s = time.time() - t1
@@ -149,6 +204,13 @@ def main(argv=None):
         print(f"guard: traps={sum(gs['traps'].values())} "
               f"fallbacks={sum(gs['fallbacks'].values())} "
               f"recovered={gs['recovered']} (all requests validated)")
+    if args.store:
+        ss = _store.stats()
+        st = _store.active()
+        print(f"store: hits={ss['hit']} misses={ss['miss']} "
+              f"plans_built={ss['plan_built']} "
+              f"quarantined={ss['quarantined']} "
+              f"({st.entry_count()} entries on disk at {st.root})")
     if args.trace:
         print(f"trace written to {obs.export_trace(args.trace)}")
     if obs.enabled():

@@ -41,9 +41,33 @@ Counter vocabulary used by the executor stack (DESIGN.md §12):
 * ``guard.raised{error=...}`` — unrecovered traps that escaped as a
   typed ``GuardError`` (``GuardTrap`` / ``CachePoisoned``), by type.
 
+* ``store.hit{kind=...}`` / ``store.miss{kind=...}`` — durable plan
+  store (DESIGN.md §15) probes by entry kind (``class`` / ``fused``).
+  A hit means the plan was decoded from disk AND re-passed its ring-1
+  audit; everything else falls through to a miss.
+* ``store.write{kind=...}`` / ``store.write_failed{kind=...}`` —
+  write-backs after a replan (failures are non-fatal: the store
+  degrades to a pure in-process cache on a read-only disk).
+* ``store.corrupt{kind=...}`` / ``store.quarantined{kind=...}`` —
+  integrity failures by cause (``corrupt`` = checksum/structure,
+  ``audit`` = decoded fine but refused by ring 1). ``quarantined``
+  counts the entries actually moved to ``quarantine/`` — under a
+  detection race exactly one detector wins the move, so
+  ``quarantined <= corrupt``.
+* ``store.version_skew`` — entries from an older schema or planner
+  generation: a plain miss (legal, just unusable), overwritten by the
+  rebuild, never quarantined.
+* ``store.plan_built{kind=...}`` — plans built from scratch (the CI
+  warm-start gate asserts this stays 0 on a disk-warm boot).
+* ``store.warmstart_us{workload=...}`` — first-call latency histogram
+  of disk-warm boots (benchmarks/store_warmstart.py).
+
 The guard counters are *also* mirrored into ``repro.guard.stats()``,
 which records regardless of obs being enabled — guards must count even
-when telemetry is off.
+when telemetry is off. The store counters mirror the same way:
+``repro.store.stats()`` is the always-on session record (plus a
+``store_quarantined`` mirror inside ``guard.stats()``), and the
+``store.*`` obs counters light up only under telemetry.
 
 Span vocabulary for gradients mirrors the forward's: ``program.vjp`` /
 ``fused.vjp`` / ``stage.vjp`` wrap the corresponding backward rule
