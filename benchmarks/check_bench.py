@@ -52,6 +52,19 @@ the ``store/disk/fault_injection`` row rides the generic
 fault-injection gate — every injected disk fault (truncation, bit
 flip, version skew, torn write, quarantine race) caught.
 
+Resilience gates (PR 10, DESIGN.md §16): the ``resilience/chaos_soak``
+row aggregates the chaos soak's full injector matrix (memory + disk
+faults x {ref, pallas}) and must report ``faults_caught ==
+faults_injected`` with ``silent_wrong_outputs == 0`` (every request
+served while an injector was active either returned bitwise-correct
+output or failed loudly), ``recovery_requests <= recovery_k`` (the
+circuit breaker closed within K requests of the injector clearing),
+``traps_while_open == 0`` (an open breaker routes at plan level — the
+per-call trap cost is demonstrably gone), and a
+``breaker_steady_overhead`` (open-breaker shunted dispatch vs unguarded
+ref warm dispatch, a paired same-machine measurement) at most
+``BREAKER_OVERHEAD_TOL``.
+
 Other wall-clock rows are reported but never gated (CI machines are
 noisy); rows whose ``us`` is null carry no wall-clock measurement at
 all (model-only/telemetry rows) and are explicitly exempt from any
@@ -82,9 +95,14 @@ GUARD_OVERHEAD_TOL = 1.05
 # are the deterministic disk_hit_rate == 1 / plans_built == 0 pair)
 WARMSTART_MIN_SPEEDUP = 0.98
 
+# open-breaker (shunted) warm dispatch may cost at most this multiple
+# of unguarded ref warm dispatch (ISSUE 10: degraded service costs ref
+# price, not trap-and-fallback price; paired same-machine measurement)
+BREAKER_OVERHEAD_TOL = 1.05
+
 _GATED_SUFFIXES = ("/model", "/program", "/model_error", "/telemetry",
                    "/bwd_telemetry", "/overhead", "/fault_injection",
-                   "/warmstart")
+                   "/warmstart", "/chaos_soak")
 
 
 def _has_timing(row: dict) -> bool:
@@ -193,6 +211,48 @@ def check(baseline: dict, current: dict) -> list:
                     f"{name}: {caught}/{injected} injected faults caught "
                     f"({'; '.join(missed) or 'no per-kind detail'}) — an "
                     "uncaught fault is a silent-wrong-output path")
+            continue
+        if name.endswith("/chaos_soak"):
+            # the chaos-soak SLO contract (ISSUE 10): all deterministic
+            # except the paired steady-overhead ratio
+            d = _derived(row)
+            try:
+                caught = int(d.get("faults_caught"))
+                injected = int(d.get("faults_injected"))
+                silent = int(d.get("silent_wrong_outputs"))
+                recovery = int(d.get("recovery_requests"))
+                recovery_k = int(d.get("recovery_k"))
+                traps_open = int(d.get("traps_while_open"))
+                overhead = float(d.get("breaker_steady_overhead"))
+            except (TypeError, ValueError):
+                failures.append(
+                    f"{name}: chaos_soak row missing parseable "
+                    f"faults_caught/faults_injected/silent_wrong_outputs/"
+                    f"recovery_requests/recovery_k/traps_while_open/"
+                    f"breaker_steady_overhead")
+                continue
+            if caught != injected or injected == 0:
+                failures.append(
+                    f"{name}: {caught}/{injected} soak-window faults "
+                    "caught — an uncaught fault is a silent-wrong-output "
+                    "path under live serving")
+            if silent != 0:
+                failures.append(
+                    f"{name}: {silent} silent wrong output(s) served "
+                    "(gate: zero — wrong bits must never leave as ok)")
+            if recovery > recovery_k:
+                failures.append(
+                    f"{name}: breaker recovery took {recovery} requests "
+                    f"after the injector cleared (gate: <= {recovery_k})")
+            if traps_open != 0:
+                failures.append(
+                    f"{name}: {traps_open} trap(s) fired while a circuit "
+                    "was open (gate: 0 — an open breaker must route at "
+                    "plan level, not pay per-call trap cost)")
+            if overhead > BREAKER_OVERHEAD_TOL:
+                failures.append(
+                    f"{name}: open-breaker dispatch costs {overhead:.3f}x "
+                    f"unguarded ref warm (gate: <= {BREAKER_OVERHEAD_TOL}x)")
             continue
         if name.endswith("/warmstart"):
             # the durable-store warm-start contract (ISSUE 9): a fresh

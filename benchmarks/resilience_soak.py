@@ -1,0 +1,124 @@
+"""Chaos-soak SLOs + breaker steady-state overhead (DESIGN.md §16).
+
+Two questions the resilience layer must answer with numbers:
+
+* **Do the serving SLOs hold under scheduled faults?** The per-cell
+  ``resilience/soak/*`` rows (model-only: ``us`` is null) replay the
+  full injector matrix of :func:`repro.resilience.chaos.run_matrix` —
+  memory + disk faults x {ref, pallas} — against a live guarded request
+  loop with a bitwise ref oracle. The aggregate gated
+  ``resilience/chaos_soak`` row reports
+  ``faults_caught``/``faults_injected`` (check_bench requires equal:
+  every windowed request either served correct bits or failed loudly —
+  zero silent wrong outputs), ``recovery_requests`` vs ``recovery_k``
+  (the breaker closed within K requests of the injector clearing), and
+  ``traps_while_open`` (must be 0: an open circuit routes at plan level,
+  the per-call trap cost is gone).
+* **What does open-circuit service cost?** ``breaker_steady_overhead``
+  is a paired warm measurement: the condemned pallas program dispatched
+  through an OPEN breaker (one route decision + the guarded ref twin)
+  vs the same program compiled for ref and dispatched unguarded.
+  check_bench gates the ratio at ``BREAKER_OVERHEAD_TOL`` (1.05x) —
+  degraded service must cost ref price, not trap-and-fallback price.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import guard
+from repro.combinators import compile_expr
+from repro.combinators import vocab as V
+from repro.resilience import breaker as _breaker
+from repro.resilience import chaos
+
+REPS = 20
+STEADY_N = 12
+
+
+def _steady_overhead():
+    """(unguarded ref µs, open-breaker shunted µs, traps during the
+    shunted reps) for one 2^STEADY_N bit-reversal."""
+    from .autodiff_overhead import _timed  # shared min-stat methodology
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        1 << STEADY_N).astype(np.float32))
+    f_ref = compile_expr(V.bit_reverse(STEADY_N), engine="ref",
+                         optimize=False)
+    f_pal = compile_expr(V.bit_reverse(STEADY_N), engine="pallas",
+                         optimize=False)
+    guard.disable()
+    jax.block_until_ready(f_ref(x))          # warm the unguarded ref path
+    us_plain = _timed(f_ref, x, reps=REPS)
+    board = _breaker.board()
+    # a cool-down far beyond the rep count keeps the circuit OPEN for
+    # the whole timed run (no half-open probe mid-measurement)
+    board.configure(threshold=1, cooldown=1_000_000)
+    try:
+        with guard.guarded():
+            r = board.route("pallas")        # condemn pallas: one failure
+            board.on_trap(r, ("oob",))       # at threshold=1 opens it
+            traps0 = sum(guard.stats()["traps"].values())
+            jax.block_until_ready(f_pal(x))  # warm the shunted ref twin
+            us_shunted = _timed(f_pal, x, reps=REPS)
+            traps = sum(guard.stats()["traps"].values()) - traps0
+    finally:
+        board.configure(threshold=_breaker.DEFAULT_THRESHOLD,
+                        cooldown=_breaker.DEFAULT_COOLDOWN)
+    return us_plain, us_shunted, traps
+
+
+def rows():
+    out = []
+    reports = chaos.run_matrix()
+    for rep in reports:
+        out.append((
+            f"resilience/soak/{rep.engine}_{rep.fault}", None,
+            f"requests={rep.requests};ok={rep.ok};errors={rep.errors};"
+            f"faults_caught={rep.faults_caught};"
+            f"faults_injected={rep.faults_injected};"
+            f"silent_wrong_outputs={rep.silent_wrong};"
+            f"recovery_requests={rep.recovery_requests};"
+            f"passed={rep.passed}"))
+
+    injected = sum(r.faults_injected for r in reports)
+    caught = sum(r.faults_caught for r in reports)
+    silent = sum(r.silent_wrong for r in reports)
+    traps_open = sum(r.traps_while_open for r in reports)
+    # the binding recovery bound: the worst cell, each against its own K
+    recovery = max((r.recovery_requests for r in reports
+                    if r.recovery_requests is not None), default=None)
+    recovery_k = max(r.recovery_k for r in reports)
+    unrecovered = sum(1 for r in reports if r.recovery_requests is None)
+    opens = sum(r.breaker.get("open", 0) for r in reports)
+    probes = sum(r.breaker.get("probe", 0) for r in reports)
+    closes = sum(r.breaker.get("close", 0) for r in reports)
+    all_pass = all(r.passed for r in reports)
+
+    us_plain, us_shunted, steady_traps = _steady_overhead()
+    overhead = us_shunted / max(us_plain, 1e-9)
+    out.append((
+        f"resilience/steady/2^{STEADY_N}/unguarded_ref", us_plain,
+        f"reps={REPS}"))
+    out.append((
+        f"resilience/steady/2^{STEADY_N}/open_breaker", us_shunted,
+        f"reps={REPS};breaker_steady_overhead={overhead:.3f};"
+        f"traps_during_reps={steady_traps}"))
+    out.append((
+        "resilience/chaos_soak", None,
+        f"cells={len(reports)};all_pass={all_pass};"
+        f"faults_caught={caught};faults_injected={injected};"
+        f"silent_wrong_outputs={silent};"
+        f"recovery_requests={'unrecovered' if unrecovered else recovery};"
+        f"recovery_k={recovery_k};"
+        f"traps_while_open={traps_open + steady_traps};"
+        f"breaker_opens={opens};breaker_probes={probes};"
+        f"breaker_closes={closes};"
+        f"breaker_steady_overhead={overhead:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in rows():
+        print(",".join(str(v) for v in row))

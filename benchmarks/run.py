@@ -27,12 +27,12 @@ def main() -> None:
                     help="comma-separated subset: "
                          "fig9,fig10,transpose,sort,khc,roofline,"
                          "combinators,autodiff,stagefusion,classdispatch,"
-                         "guard,store")
+                         "guard,store,resilience")
     ap.add_argument("--smoke", action="store_true",
                     help="fast sanity subset (combinators + autodiff + "
-                         "stagefusion + classdispatch + guard + store; "
-                         "pairs with `pytest -m tier1` as the quick tier-1 "
-                         "smoke entry point)")
+                         "stagefusion + classdispatch + guard + store + "
+                         "resilience; pairs with `pytest -m tier1` as the "
+                         "quick tier-1 smoke entry point)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows + metadata as JSON")
     ap.add_argument("--trace", default=None, metavar="TRACE.json",
@@ -48,7 +48,7 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only else None
     if args.smoke:
         want = {"combinators", "autodiff", "stagefusion", "classdispatch",
-                "guard", "store"}
+                "guard", "store", "resilience"}
 
     print("name,us_per_call,derived")
     suites = []
@@ -88,6 +88,9 @@ def main() -> None:
     if want is None or "store" in want:
         from . import store_warmstart
         suites.append(store_warmstart.rows)
+    if want is None or "resilience" in want:
+        from . import resilience_soak
+        suites.append(resilience_soak.rows)
     collected = []
     for rows_fn in suites:
         for name, us, derived in rows_fn():

@@ -37,15 +37,40 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync (persists the rename itself)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(dirpath: str, step: int, tree: Any, *,
          extra_state: Optional[Dict] = None, keep_last: int = 3) -> str:
-    """Atomic checkpoint write (tmp dir + rename); prunes old steps."""
+    """Atomic + durable checkpoint write; prunes old steps.
+
+    Same discipline as the plan store (DESIGN.md §15): every payload is
+    flushed and fsync'd inside a hidden tmp dir, the tmp dir itself is
+    fsync'd, and only then does a single ``os.replace`` publish the
+    step directory (parent dir fsync'd after, so the rename survives a
+    power cut). A job killed at ANY instant therefore leaves either the
+    complete published step or an invisible ``.tmp_ckpt_*`` orphan —
+    never a torn ``step_*`` a restore could trip over
+    (``tests/test_data_ckpt.py`` kills a writer mid-save to prove it).
+    """
     target = os.path.join(dirpath, f"step_{step:08d}")
     os.makedirs(dirpath, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=dirpath, prefix=".tmp_ckpt_")
     try:
         flat = _flatten(tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "step": step,
             "extra_state": extra_state or {},
@@ -55,9 +80,13 @@ def save(dirpath: str, step: int, tree: Any, *,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(target):
             shutil.rmtree(target)
-        os.rename(tmp, target)
+        os.replace(tmp, target)
+        _fsync_dir(dirpath)
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise

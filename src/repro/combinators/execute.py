@@ -1492,9 +1492,10 @@ def clear_caches() -> None:
     ops._class_plan_cached.cache_clear()
     from ..guard.validate import clear_guard_caches
     clear_guard_caches()
-    from .. import guard, store
+    from .. import guard, resilience, store
     guard.reset_stats()
     store.reset_stats()
+    resilience.reset()
     obs.reset()
 
 

@@ -333,10 +333,14 @@ def run_disk_fault_matrix(n: int = 6) -> dict:
 
 def _fresh_guard_state():
     """Clear every cache a fault could hide behind: guard validation +
-    guarded executables (so ring 1 re-proves and ring 2 re-bakes)."""
+    guarded executables (so ring 1 re-proves and ring 2 re-bakes), and
+    the resilience breaker board (a test's traps must not leave a
+    condemned engine behind for the next test)."""
+    from .. import resilience
     from . import validate as _v
 
     _v.clear_guard_caches()
+    resilience.board().reset()
 
 
 def _clear_runtime_only():

@@ -306,16 +306,29 @@ def _diagnose(prog, t, kinds, engine):
 
 def _resolve_or_fallback(prog, t, x, engine, batched, run_engine):
     """The fallback state machine: run guarded on ``engine``; on a trap,
-    degrade pallas → ref; raise typed only when the last engine traps."""
-    from .. import guard as _g
+    degrade pallas → ref; raise typed only when the last engine traps.
 
+    The resilience breaker board (DESIGN.md §16) fronts the dispatch:
+    an open circuit rewrites ``engine`` to its fallback *before* the
+    call — one clean ref dispatch, zero per-call trap/fallback cost on
+    the condemned engine — and clean/trapped outcomes on the requested
+    engine feed the circuit state (shunted outcomes deliberately do
+    not: a shunted call's behavior says nothing about pallas health)."""
+    from .. import guard as _g
+    from ..resilience import breaker as _breaker
+
+    board = _breaker.board()
+    route = board.route(engine)
+    engine = route.engine      # an open circuit shunts to the fallback
     y, flags = run_engine(engine)(x)
     mask = int(flags)          # the ONE host readback, at the API edge
     if not mask:
+        board.on_success(route)
         return y
     kinds = resolve_flags(mask)
     for k in kinds:
         _g._record_trap(k, engine)
+    board.on_trap(route, kinds)
     if engine != "ref":
         _g._record_fallback("ref")
         y2, flags2 = run_engine("ref")(x)

@@ -62,12 +62,35 @@ Counter vocabulary used by the executor stack (DESIGN.md §12):
 * ``store.warmstart_us{workload=...}`` — first-call latency histogram
   of disk-warm boots (benchmarks/store_warmstart.py).
 
+* ``resilience.breaker.open{engine=...}`` /
+  ``resilience.breaker.probe{engine=...}`` /
+  ``resilience.breaker.close{engine=...}`` — circuit-breaker
+  transitions (DESIGN.md §16): a protected engine condemned after
+  ``threshold`` consecutive traps, the half-open health probe admitted
+  after the cool-down, and a clean probe restoring full service.
+* ``resilience.breaker.shunt{engine=...}`` — calls routed straight to
+  the fallback engine at plan level while a circuit is open (the
+  chaos gate's ``traps_while_open == 0`` verifies these pay zero
+  per-call trap cost).
+* ``resilience.retry`` — bounded retries of retryable GuardErrors
+  (request policy backoff, and the validated train step's transient
+  trap retries).
+* ``resilience.deadline`` — requests that exhausted their deadline
+  budget (including refusing a backoff sleep that could only end past
+  the deadline).
+* ``resilience.shed`` — requests refused at admission: backlog at
+  capacity, or the EWMA-estimated drain time already exceeds the
+  deadline budget.
+
 The guard counters are *also* mirrored into ``repro.guard.stats()``,
 which records regardless of obs being enabled — guards must count even
 when telemetry is off. The store counters mirror the same way:
 ``repro.store.stats()`` is the always-on session record (plus a
 ``store_quarantined`` mirror inside ``guard.stats()``), and the
-``store.*`` obs counters light up only under telemetry.
+``store.*`` obs counters light up only under telemetry. The resilience
+counters follow suit: ``repro.resilience.stats()`` aggregates the
+always-on request-policy record plus the breaker board's transition
+counts and live circuit snapshots.
 
 Span vocabulary for gradients mirrors the forward's: ``program.vjp`` /
 ``fused.vjp`` / ``stage.vjp`` wrap the corresponding backward rule

@@ -82,7 +82,7 @@ def _instrument_step(train_step: Callable) -> Callable:
     return observed
 
 
-def _guard_step(train_step: Callable) -> Callable:
+def _guard_step(train_step: Callable, trap_retries: int = 1) -> Callable:
     """Guarded step variant (DESIGN.md §14): the step body runs with
     :mod:`repro.guard` rings active — plan validation plus guarded
     permute dispatch inside the loss — and each *eager* call resolves a
@@ -90,13 +90,33 @@ def _guard_step(train_step: Callable) -> Callable:
     the typed :class:`repro.guard.GuardTrap` instead of silently
     poisoning the optimizer state. Under an outer jit trace the
     host-side resolution is skipped (the in-program guards still
-    recorded at trace time); the returned metrics are unchanged."""
+    recorded at trace time); the returned metrics are unchanged.
+
+    Transient traps retry (DESIGN.md §16): a *retryable*
+    :class:`~repro.guard.GuardError` escaping the step body — e.g. a
+    poisoned plan cache that quarantine + replan clears — is retried up
+    to ``trap_retries`` times (counted as ``resilience.retry``) before
+    it propagates. The step is a pure function of its inputs, so a
+    retry is safe; the nonfinite health check is deliberately OUTSIDE
+    the retry loop — a nonfinite loss recomputes deterministically on
+    the same batch, so retrying it would just re-prove the trap."""
     from .. import guard
+    from ..resilience import policy as _rp
 
     @functools.wraps(train_step)
     def validated(params, opt_state, batch):
-        with guard.guarded():
-            out = train_step(params, opt_state, batch)
+        attempt = 0
+        while True:
+            try:
+                with guard.guarded():
+                    out = train_step(params, opt_state, batch)
+                break
+            except guard.GuardError as e:
+                if (_rp.classify(e) != _rp.RETRYABLE
+                        or attempt >= trap_retries):
+                    raise
+                attempt += 1
+                _rp._record("retries", obs_name="resilience.retry")
         if not _trace_state_clean():
             return out
         metrics = out[2]
@@ -118,7 +138,8 @@ def make_train_step(cfg: ArchConfig, mesh=None,
                     opt_cfg: Optional[AdamWConfig] = None,
                     grad_accum: int = 1,
                     loss_fn: Optional[Callable] = None,
-                    validate: bool = False):
+                    validate: bool = False,
+                    trap_retries: int = 1):
     opt_cfg = opt_cfg or AdamWConfig(state_bits=cfg.opt_bits)
 
     def loss_of(params, batch):
@@ -165,7 +186,7 @@ def make_train_step(cfg: ArchConfig, mesh=None,
 
     step = _instrument_step(train_step)
     if validate:
-        step = _guard_step(step)
+        step = _guard_step(step, trap_retries=trap_retries)
     return step, opt_cfg
 
 

@@ -73,3 +73,56 @@ def test_checkpoint_prunes_old():
             ckpt.save(d, s, tree, keep_last=2)
         steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
         assert len(steps) == 2 and ckpt.latest_step(d) == 5
+
+
+_KILL_WRITER = """
+import sys
+import numpy as np
+from repro.checkpoint import ckpt
+
+d = sys.argv[1]
+tree = {"w": np.arange(1 << 16, dtype=np.float32),
+        "opt": {"m": np.ones((1 << 14,), np.float32)}}
+print("ready", flush=True)
+step = 0
+while True:
+    step += 1
+    ckpt.save(d, step, tree, keep_last=1_000_000)
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_survives_kill_mid_write():
+    """SIGKILL a process mid-``ckpt.save`` loop: every *published*
+    ``step_*`` directory must restore cleanly (the tmp + fsync +
+    os.replace discipline means a torn write can only ever be an
+    invisible ``.tmp_ckpt_*`` orphan, never a corrupt step)."""
+    import signal
+    import subprocess
+    import sys
+    import time
+
+    tree = {"w": np.arange(1 << 16, dtype=np.float32),
+            "opt": {"m": np.ones((1 << 14,), np.float32)}}
+    with tempfile.TemporaryDirectory() as d:
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _KILL_WRITER, d],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True)
+        try:
+            assert proc.stdout.readline().strip() == "ready"
+            # let it race through a few saves, then kill at a random
+            # instant (mid-write with high probability)
+            time.sleep(1.0)
+            proc.send_signal(signal.SIGKILL)
+        finally:
+            proc.kill()
+            proc.wait()
+        published = sorted(x for x in os.listdir(d)
+                           if x.startswith("step_"))
+        assert published, "writer never published a checkpoint"
+        for name in published:
+            step = int(name.split("_")[1])
+            restored, _ = ckpt.restore(d, step, tree)
+            for a, b in zip(jax.tree.leaves(tree),
+                            jax.tree.leaves(restored)):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
